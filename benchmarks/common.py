@@ -1,0 +1,25 @@
+"""Benchmark utilities: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,51 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness:
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5|fig6|kernel|scaling]
+
+fig5    — paper Fig 5 (simulation, p_Y in {0.01, 0.1}) runtime + ratios
+fig6    — paper Fig 6 (census-like categorical data) runtime + ratios
+kernel  — counting-kernel micro + GFP §3.1 optimization ablation
+scaling — distributed engine strong-scaling on an 8-device host mesh
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["fig5", "fig6", "kernel", "scaling"])
+    args = ap.parse_args()
+
+    from .common import emit
+
+    suites = {}
+    if args.only in (None, "fig5"):
+        from . import fig5_sim
+        suites["fig5"] = fig5_sim.run
+    if args.only in (None, "fig6"):
+        from . import fig6_census
+        suites["fig6"] = fig6_census.run
+    if args.only in (None, "kernel"):
+        from . import kernel_bench
+        suites["kernel"] = kernel_bench.run
+    if args.only in (None, "scaling"):
+        from . import scaling
+        suites["scaling"] = scaling.run
+
+    print("name,us_per_call,derived")
+    ok = True
+    for name, fn in suites.items():
+        try:
+            emit(fn())
+        except Exception as e:  # pragma: no cover
+            ok = False
+            print(f"{name}/SUITE_FAILED,0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,172 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+Layout per step:  <dir>/step_<n>/  arrays.npz  MANIFEST.json  (tmp+rename, so a
+crash mid-write never corrupts the latest good checkpoint).  ``MANIFEST.json``
+records the flattened tree structure, shapes and dtypes; restore re-sharding
+is free because arrays are device_put against whatever mesh/shardings the NEW
+topology provides (elastic restart = same checkpoint, different mesh).
+
+On a real multi-host pod each process writes its addressable shards
+(``process_index`` in the filename) and restore re-assembles per the manifest;
+in this single-process container that degenerates to one file, but the naming
+and manifest format already carry the process dimension.
+
+``PreemptionGuard`` converts SIGTERM (the cloud preemption signal) into a
+"checkpoint now, then exit" request the train loop polls once per step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             blocking: bool = False) -> None:
+        flat = _flatten(tree)
+        # Pull to host NOW (cheap copy); disk IO happens in the background.
+        host = [(k, np.asarray(jax.device_get(v))) for k, v in flat]
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "process_index": jax.process_index(),
+            "process_count": jax.process_count(),
+            "keys": [k for k, _ in host],
+            "shapes": {k: list(v.shape) for k, v in host},
+            "dtypes": {k: str(v.dtype) for k, v in host},
+            "extra": extra or {},
+        }
+        # serialize writers: a blocking save racing an in-flight async save of
+        # the same step would have its tmp dir os.replace()d away mid-write
+        self.wait()
+        if self.async_save and not blocking:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, manifest), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, manifest)
+
+    def _write(self, step: int, host, manifest) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + f".tmp{jax.process_index()}"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"arrays_p{jax.process_index()}.npz"),
+                 **{k: v for k, v in host})
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp0"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, dict]:
+        """Restore into the structure of ``tree_like``; device_put against
+        ``shardings`` (same structure) when given — elastic re-shard."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, f"arrays_p{jax.process_index()}.npz"))
+        flat = _flatten(tree_like)
+        shard_flat = _flatten(shardings) if shardings is not None else None
+        out = []
+        for i, (k, like) in enumerate(flat):
+            arr = data[k]
+            want_dtype = getattr(like, "dtype", arr.dtype)
+            arr = arr.astype(want_dtype)
+            if shard_flat is not None:
+                arr = jax.device_put(arr, shard_flat[i][1])
+            out.append(arr)
+        treedef = jax.tree_util.tree_structure(tree_like)
+        return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+class PreemptionGuard:
+    """SIGTERM -> graceful checkpoint-and-exit for the train loop."""
+
+    def __init__(self):
+        self.requested = False
+        self._prev = None
+
+    def install(self) -> "PreemptionGuard":
+        def handler(signum, frame):
+            self.requested = True
+        self._prev = signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def uninstall(self) -> None:
+        if self._prev is not None:
+            signal.signal(signal.SIGTERM, self._prev)
+
+
+class StragglerMonitor:
+    """Step-time tracker: flags steps slower than ``threshold``x the running
+    median.  On a real pod the per-host step time is psum-maxed and the slow
+    host re-sharded out (recipe in DESIGN.md); here we expose detection +
+    counters so the loop and tests can exercise the policy."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 32):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.flagged = 0
+
+    def record(self, dt: float) -> bool:
+        import statistics
+        slow = False
+        if len(self.times) >= 5:
+            med = statistics.median(self.times[-self.window:])
+            slow = dt > self.threshold * med
+        self.times.append(dt)
+        self.flagged += slow
+        return slow

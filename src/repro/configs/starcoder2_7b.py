@@ -1,0 +1,9 @@
+"""starcoder2-7b — dense GQA kv=4, RoPE.  [arXiv:2402.19173; hf]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4, d_head=128,
+    d_ff=18432, vocab_size=49152,
+    source="arXiv:2402.19173",
+)

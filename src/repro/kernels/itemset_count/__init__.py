@@ -1,0 +1,1 @@
+from .ops import itemset_counts, itemset_counts_ref, itemset_counts_ref_blocked

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: multitude-targeted itemset counting.
+
+TPU mapping of the GFP-growth counting step (see ref.py for semantics).
+
+Layout rationale (TPU memory hierarchy):
+  * transactions arrive TRANSPOSED as (W, N): the huge N axis is the 128-lane
+    dimension, W (a handful of packed uint32 words) is the sublane axis;
+  * targets stay (K, W): K is the sublane axis of the (K_b, N_b) containment
+    tile that feeds the reduction;
+  * weights arrive (C, N) and the output is (C, K) — class axis on sublanes,
+    keeping the lane axis 128-aligned on both operands of the final reduce;
+  * grid = (K_tiles, N_tiles), N fastest-varying; the (C, K_b) output block is
+    revisited across the N sweep and accumulated in place (initialised when
+    n_idx == 0) — VMEM-resident accumulator, one HBM writeback per K tile;
+  * the containment test is an unrolled loop over the W words (W is static and
+    small — 32·W items), all in VREG-friendly elementwise uint32 ops (VPU);
+    the weighted reduction is a small int32 dot_general.
+
+VMEM budget per grid step (defaults W<=64, N_b=1024, K_b=256, C<=8):
+  tx (64,1024)·4B = 256KiB ; tgt (256,64)·4B = 64KiB ; w (8,1024)·4B = 32KiB ;
+  containment tile (256,1024)·4B = 1MiB ; out (8,256)·4B = 8KiB  << 16MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _itemset_count_kernel(tx_ref, tgt_ref, w_ref, out_ref, *, n_words: int,
+                          accum: str = "vpu_int32"):
+    """Grid step (k_idx, n_idx): accumulate counts for one (K_b, N_b) tile.
+
+    ``accum``:
+      * 'vpu_int32' — int32 dot on the VPU (always exact);
+      * 'mxu_f32'   — f32 dot on the MXU (§Perf variant): counts stay exact
+        while every partial sum < 2^24 (enforced in ops.py); on TPU this moves
+        the reduction from ~4 TOP/s VPU lanes to the systolic array.
+    """
+    n_idx = pl.program_id(1)
+
+    # Containment: AND over the W packed words, unrolled (W static, small).
+    tgt = tgt_ref[...]  # (K_b, W) uint32
+    acc = None
+    for w in range(n_words):
+        t_row = tx_ref[w, :]          # (N_b,) uint32
+        g_col = tgt[:, w][:, None]    # (K_b, 1) uint32
+        hit = (t_row[None, :] & g_col) == g_col  # (K_b, N_b) bool
+        acc = hit if acc is None else (acc & hit)
+
+    if accum == "mxu_f32":
+        contained = acc.astype(jnp.float32)       # (K_b, N_b)
+        weights = w_ref[...].astype(jnp.float32)  # (C, N_b)
+        part = jax.lax.dot_general(
+            weights, contained,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(jnp.int32)
+    else:
+        contained = acc.astype(jnp.int32)             # (K_b, N_b)
+        weights = w_ref[...].astype(jnp.int32)        # (C, N_b)
+        # (C, N_b) x (K_b, N_b) -> (C, K_b), contracting the lane axis.
+        part = jax.lax.dot_general(
+            weights, contained,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(n_idx != 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_n", "interpret",
+                                              "accum"))
+def itemset_counts_pallas(
+    tx_bits_t: jnp.ndarray,   # (W, N) uint32, N % block_n == 0
+    tgt_bits: jnp.ndarray,    # (K, W) uint32, K % block_k == 0
+    weights_t: jnp.ndarray,   # (C, N) int32
+    *,
+    block_k: int = 256,
+    block_n: int = 1024,
+    interpret: bool = False,
+    accum: str = "vpu_int32",
+) -> jnp.ndarray:             # (C, K) int32
+    n_words, n = tx_bits_t.shape
+    k = tgt_bits.shape[0]
+    c = weights_t.shape[0]
+    if n % block_n or k % block_k:
+        raise ValueError(f"N({n}) % block_n({block_n}) and K({k}) % "
+                         f"block_k({block_k}) must be 0 (pad in ops.py)")
+
+    grid = (k // block_k, n // block_n)
+    kernel = functools.partial(_itemset_count_kernel, n_words=n_words,
+                               accum=accum)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_words, block_n), lambda ki, ni: (0, ni)),
+            pl.BlockSpec((block_k, n_words), lambda ki, ni: (ki, 0)),
+            pl.BlockSpec((c, block_n), lambda ki, ni: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((c, block_k), lambda ki, ni: (0, ki)),
+        out_shape=jax.ShapeDtypeStruct((c, k), jnp.int32),
+        interpret=interpret,
+    )(tx_bits_t, tgt_bits, weights_t)

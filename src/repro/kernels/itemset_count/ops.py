@@ -1,0 +1,82 @@
+"""Public jit'd wrapper around the itemset-counting Pallas kernel.
+
+Handles padding, layout transposition, backend selection (interpret mode on
+CPU — the kernel body executes in Python for correctness validation; compiled
+Mosaic on TPU), and a pure-jnp fallback for degenerate shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import itemset_counts_pallas
+from .ref import itemset_counts_ref, itemset_counts_ref_blocked
+
+__all__ = ["itemset_counts", "itemset_counts_ref", "itemset_counts_ref_blocked"]
+
+# Unrolling the word loop beyond this is counter-productive; fall back to the
+# blocked jnp reference (still jit-compiled) for enormous item universes.
+MAX_KERNEL_WORDS = 64
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def itemset_counts(
+    tx_bits: jnp.ndarray,     # (N, W) uint32
+    tgt_bits: jnp.ndarray,    # (K, W) uint32
+    weights: jnp.ndarray,     # (N, C) int32  (or (N,) -> C=1)
+    *,
+    block_k: int = 256,
+    block_n: int = 1024,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+    accum: str = "vpu_int32",
+) -> jnp.ndarray:             # (K, C) int32
+    """Exact counts of every target itemset, per weight column (class).
+
+    ``accum='mxu_f32'`` routes the weighted reduction through the MXU in f32
+    (exact while each count < 2^24; asserted below) — the counting-kernel
+    §Perf variant."""
+    if weights.ndim == 1:
+        weights = weights[:, None]
+    n, w = tx_bits.shape
+    k = tgt_bits.shape[0]
+    c = weights.shape[1]
+    if k == 0:
+        return jnp.zeros((0, c), jnp.int32)
+    if n == 0:
+        return jnp.zeros((k, c), jnp.int32)
+    if not use_kernel or w > MAX_KERNEL_WORDS:
+        return itemset_counts_ref_blocked(tx_bits, tgt_bits, weights)
+
+    if interpret is None:
+        interpret = _on_cpu()
+    if accum == "mxu_f32":
+        # exactness bound: every partial sum is <= sum(|weights|) per column
+        assert n < (1 << 24), "mxu_f32 requires N < 2^24 rows per shard"
+
+    # Shrink blocks for small problems, keeping TPU-friendly minima.
+    block_n = min(block_n, _round_up(n, 128))
+    block_k = min(block_k, _round_up(k, 8))
+
+    n_pad = _round_up(n, block_n) - n
+    k_pad = _round_up(k, block_k) - k
+    tx_p = jnp.pad(tx_bits, ((0, n_pad), (0, 0)))        # pad rows: weight 0
+    wt_p = jnp.pad(weights, ((0, n_pad), (0, 0)))
+    tgt_p = jnp.pad(tgt_bits, ((0, k_pad), (0, 0)))       # pad targets: sliced
+
+    out_t = itemset_counts_pallas(
+        tx_p.T, tgt_p, wt_p.T.astype(jnp.int32),
+        block_k=block_k, block_n=block_n, interpret=interpret, accum=accum,
+    )                                                     # (C, K_pad)
+    return out_t.T[:k, :]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

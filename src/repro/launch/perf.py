@@ -1,0 +1,158 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: compile a cell under a named config variant and
+report the roofline delta vs the baseline config.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch arctic-480b \
+      --shape train_4k --variant moe_gather
+
+Variants are explicit, named hypotheses (see VARIANTS below); each run prints
+baseline and variant three-term rooflines so the hypothesis→change→measure
+cycle lands directly in EXPERIMENTS.md §Perf.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from ..configs import ARCHS, get_config
+from ..models import shape_by_name, ALL_SHAPES
+from ..parallel import sharding as shd
+from ..roofline.analysis import analyze, model_flops
+from .dryrun import _compile_cell, _depth_variant
+from .mesh import make_production_mesh
+from .specs import input_specs, step_fn
+
+
+def v_moe_gather(cfg):
+    """MoE dispatch via sort/gather buffers instead of one-hot einsums —
+    hypothesis: removes the 2·T·(E·C)·D dispatch/combine FLOPs (~30-70% of
+    MoE-layer HLO flops) and the (T,E,C) transient."""
+    return dataclasses.replace(cfg, moe_impl="gather")
+
+
+def v_no_remat(cfg):
+    """Disable activation rematerialization — hypothesis: removes the
+    recomputed forward (~25% of train FLOPs) and its re-gathers, paying
+    activation HBM instead.  Only sane where memory headroom exists."""
+    return dataclasses.replace(cfg, remat=False)
+
+
+def v_attn_kv_seq(cfg):
+    """Force the kv_seq (split-KV) attention sharding even when heads divide
+    the mesh — hypothesis: k/v stay seq-sharded (no repeat-to-heads gather);
+    scores psum over 'model' instead.  Wins when Skv is large vs H."""
+    return dataclasses.replace(cfg, force_kv_seq_attn=True)
+
+
+def v_cap_075(cfg):
+    """Capacity factor 1.0 -> 0.75 — hypothesis: linear cut of expert-FFN and
+    dispatch FLOPs/bytes at the cost of more dropped tokens (quality trade
+    recorded, not evaluated here)."""
+    return dataclasses.replace(cfg, capacity_factor=0.75)
+
+
+def v_groups_x2(cfg):
+    """Double dispatch groups — hypothesis: halves the (T_g,E,C) dispatch
+    transient and its HBM traffic at equal FLOPs."""
+    return dataclasses.replace(cfg, moe_groups_per_dp=cfg.moe_groups_per_dp * 2)
+
+
+def v_chunk_512(cfg):
+    """SSD chunk 128/256 -> 512 — hypothesis: fewer inter-chunk scan steps
+    (less state HBM traffic) at quadratically larger intra-chunk matmuls;
+    helps while compute term has headroom."""
+    return dataclasses.replace(cfg, ssm_chunk=512)
+
+
+def v_qblock_2048(cfg):
+    """Attention q-block 512 -> 2048 — hypothesis: 4x fewer scan steps and
+    score-tile launches; raises transient memory by 4x."""
+    return dataclasses.replace(cfg, attn_block_q=2048)
+
+
+def v_mb4(cfg):
+    """4 gradient-accumulation microbatches — hypothesis: activation
+    transients (the (B,S,D)-sized live set dominating MoE train temp) shrink
+    ~4x; FSDP weight re-gathers go up ~4x (wire trade)."""
+    return dataclasses.replace(cfg, train_microbatches=4)
+
+
+def v_mb8(cfg):
+    return dataclasses.replace(cfg, train_microbatches=8)
+
+
+VARIANTS = {
+    "mb4": v_mb4,
+    "mb8": v_mb8,
+    "moe_gather": v_moe_gather,
+    "no_remat": v_no_remat,
+    "attn_kv_seq": v_attn_kv_seq,
+    "cap_0.75": v_cap_075,
+    "groups_x2": v_groups_x2,
+    "ssd_chunk_512": v_chunk_512,
+    "qblock_2048": v_qblock_2048,
+}
+
+
+def measure(arch, shape_name, mesh, cfg, n_devices):
+    """Corrected roofline for an arbitrary cfg (same depth-delta method)."""
+    base_cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    unit = cfg.superblock or (cfg.moe_every if cfg.is_moe and cfg.moe_every > 1 else 1)
+    n_units = cfg.n_layers // unit
+    mf = model_flops(base_cfg, shape)
+    _, cfull = _compile_cell(arch, shape_name, mesh, cfg)
+    mem = cfull.memory_analysis()
+    d1 = dataclasses.replace(cfg, n_layers=unit, unroll_stack=True,
+                             n_enc_layers=min(cfg.n_enc_layers, 1) if cfg.encdec else 0)
+    d2 = dataclasses.replace(cfg, n_layers=unit * 2, unroll_stack=True,
+                             n_enc_layers=min(cfg.n_enc_layers, 2) if cfg.encdec else 0)
+    _, c1 = _compile_cell(arch, shape_name, mesh, d1)
+    _, c2 = _compile_cell(arch, shape_name, mesh, d2)
+    r1 = analyze(c1, mf, n_devices)
+    r2 = analyze(c2, mf, n_devices)
+    full = analyze(cfull, mf, n_devices)
+
+    def extrap(v1, v2):
+        return max(v1 + (n_units - 1) * (v2 - v1), 0.0)
+
+    roof = dataclasses.replace(
+        full,
+        flops=extrap(r1.flops, r2.flops),
+        bytes_accessed=extrap(r1.bytes_accessed, r2.bytes_accessed),
+        wire_bytes=extrap(r1.wire_bytes, r2.wire_bytes))
+    return roof, mem
+
+
+def fmt(roof, mem) -> str:
+    return (f"compute={roof.t_compute*1e3:9.1f}ms memory={roof.t_memory*1e3:9.1f}ms "
+            f"collective={roof.t_collective*1e3:9.1f}ms bottleneck={roof.bottleneck:10s} "
+            f"useful={roof.useful_ratio:5.2f} frac={roof.roofline_fraction:6.3f} "
+            f"temp={mem.temp_size_in_bytes/2**30:6.2f}GiB args={mem.argument_size_in_bytes/2**30:6.2f}GiB")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES], required=True)
+    ap.add_argument("--variant", choices=sorted(VARIANTS), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-baseline", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n = mesh.devices.size
+    base_cfg = get_config(args.arch)
+    if not args.skip_baseline:
+        roof, mem = measure(args.arch, args.shape, mesh, base_cfg, n)
+        print(f"BASELINE {args.arch}×{args.shape}: {fmt(roof, mem)}")
+    vcfg = VARIANTS[args.variant](base_cfg)
+    roof, mem = measure(args.arch, args.shape, mesh, vcfg, n)
+    print(f"VARIANT[{args.variant}] {args.arch}×{args.shape}: {fmt(roof, mem)}")
+
+
+if __name__ == "__main__":
+    main()

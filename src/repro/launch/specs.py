@@ -1,0 +1,110 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation.  These are the dry-run's inputs and the
+single source of truth for launcher in_shardings."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import shape_by_name
+from ..models.registry import Model, get_model
+from ..parallel import sharding as shd
+from ..train.optimizer import AdamWConfig, abstract_state
+from .mesh import dp_size
+
+
+def _sds(shape, dtype, logical, mesh):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), dtype,
+        sharding=shd.named_sharding(logical, shape=shape, mesh=mesh))
+
+
+def batch_specs(model: Model, seq_len: int, global_batch: int, mesh) -> Dict[str, Any]:
+    cfg = model.cfg
+    out = {
+        "tokens": _sds((global_batch, seq_len), jnp.int32,
+                       ("act_batch", None), mesh),
+        "labels": _sds((global_batch, seq_len), jnp.int32,
+                       ("act_batch", None), mesh),
+    }
+    if cfg.encdec:
+        out["frames"] = _sds((global_batch, seq_len, cfg.frontend_dim),
+                             jnp.dtype(cfg.dtype), ("act_batch", None, None), mesh)
+    return out
+
+
+def cache_abstract(model: Model, batch: int, max_len: int, mesh) -> Any:
+    cfg = model.cfg
+    specs = model.cache_specs(batch, max_len, dp_size(mesh))
+
+    def mk(leaf):
+        shape, logical = leaf
+        if shape == ():  # enc_len scalar
+            return jax.ShapeDtypeStruct((), jnp.int32)
+        return _sds(shape, jnp.dtype(cfg.dtype), logical, mesh)
+
+    return jax.tree.map(mk, specs,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and isinstance(x[0], tuple))
+
+
+def input_specs(arch: str, shape_name: str, mesh,
+                opt_cfg: Optional[AdamWConfig] = None,
+                reduced: bool = False,
+                cfg_override=None) -> Tuple[str, Tuple, Dict[str, Any]]:
+    """-> (step_kind, args_abstract, info).
+
+    step_kind in {'train', 'prefill', 'decode'}; args match the corresponding
+    step function's signature.  ``cfg_override`` swaps in a modified
+    ModelConfig (depth-reduced analysis variants, perf-iteration candidates).
+    """
+    if cfg_override is not None:
+        model = Model(cfg_override)
+    else:
+        model = get_model(arch, reduced=reduced)
+    cfg = model.cfg
+    shape = shape_by_name(shape_name)
+    with shd.sharding_ctx(mesh):
+        params = model.abstract(mesh=mesh)
+        if shape.kind == "train":
+            opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+            opt = abstract_state(params, opt_cfg)
+            batch = batch_specs(model, shape.seq_len, shape.global_batch, mesh)
+            return "train", (params, opt, batch), {"model": model,
+                                                   "opt_cfg": opt_cfg}
+        if shape.kind == "prefill":
+            batch = batch_specs(model, shape.seq_len, shape.global_batch, mesh)
+            args = (params, batch["tokens"])
+            if cfg.encdec:
+                args = args + (batch["frames"],)
+            return "prefill", args, {"model": model, "max_len": shape.seq_len}
+        # decode: one new token against a seq_len-deep cache
+        cache = cache_abstract(model, shape.global_batch, shape.seq_len, mesh)
+        token = _sds((shape.global_batch, 1), jnp.int32, ("act_batch", None), mesh)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return "decode", (params, cache, token, pos), {"model": model}
+
+
+def step_fn(kind: str, info: Dict[str, Any]):
+    """The function to lower for a given cell."""
+    model: Model = info["model"]
+    if kind == "train":
+        from ..train.train_step import make_train_step
+        return make_train_step(model, info["opt_cfg"],
+                               n_microbatches=model.cfg.train_microbatches)
+    if kind == "prefill":
+        max_len = info["max_len"]
+        if model.cfg.encdec:
+            def prefill_ed(params, tokens, frames):
+                return model.prefill(params, tokens, max_len, frames=frames)
+            return prefill_ed
+        def prefill_fn(params, tokens):
+            return model.prefill(params, tokens, max_len)
+        return prefill_fn
+    if kind == "decode":
+        def decode_fn(params, cache, token, pos):
+            return model.decode_step(params, cache, token, pos)
+        return decode_fn
+    raise ValueError(kind)

@@ -1,0 +1,102 @@
+"""Training launcher: config-driven, fault-tolerant, restartable.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1 [--resume]
+
+Production behaviour exercised here end-to-end (and by tests):
+  * deterministic data as a function of step (elastic-safe),
+  * periodic async checkpoints (atomic publish),
+  * SIGTERM -> checkpoint-and-exit (PreemptionGuard),
+  * resume from the latest checkpoint (optionally on a different mesh),
+  * straggler detection hooks,
+  * gradient compression for cross-pod reduction.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default=None, choices=[None, "bf16", "int8"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    from ..checkpoint import CheckpointManager, PreemptionGuard, StragglerMonitor
+    from ..data import TokenPipeline
+    from ..models import get_model
+    from ..parallel import sharding as shd
+    from ..train import AdamWConfig, init_state, make_train_step
+    from .mesh import make_host_mesh
+
+    model = get_model(args.arch, reduced=args.reduced)
+    cfg = model.cfg
+    mesh = make_host_mesh(args.data_mesh, args.model_mesh)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(1, args.steps // 20),
+                          state_dtype=cfg.opt_state_dtype)
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch, seed=args.seed)
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    guard = PreemptionGuard().install()
+    straggler = StragglerMonitor()
+
+    with mesh, shd.sharding_ctx(mesh):
+        params = model.init(jax.random.key(args.seed))
+        opt_state = init_state(params, opt_cfg)
+        start_step = 0
+        if args.resume and mgr and mgr.latest_step() is not None:
+            (params, opt_state), manifest = mgr.restore((params, opt_state))
+            start_step = manifest["step"]
+            print(f"resumed from step {start_step}")
+
+        step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                          n_microbatches=args.microbatches,
+                                          compression=args.compression))
+        n_tok = args.batch * args.seq
+        for step in range(start_step, args.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in pipe.host_slice(step).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            slow = straggler.record(dt)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"{n_tok/dt:,.0f} tok/s{'  [straggler]' if slow else ''}")
+            should_ckpt = mgr and (step + 1) % args.ckpt_every == 0
+            if guard.requested:
+                print("SIGTERM received: checkpointing and exiting")
+                if mgr:
+                    mgr.save(step + 1, (params, opt_state), blocking=True)
+                return
+            if should_ckpt:
+                mgr.save(step + 1, (params, opt_state))
+        if mgr:
+            mgr.save(args.steps, (params, opt_state), blocking=True)
+        guard.uninstall()
+        print("done")
+
+
+if __name__ == "__main__":
+    main()

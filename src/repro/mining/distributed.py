@@ -1,0 +1,219 @@
+"""Distributed multitude-targeted mining — the GFP-growth engine on a mesh.
+
+Parallel decomposition (maps the paper's workload to a (data, model) mesh):
+
+  * transactions (N axis)  -> sharded over the 'data' mesh axis (and 'pod'):
+    each device counts its local rows; ONE psum of the small (K_loc, C) count
+    block per launch is the only communication — the dense analogue of
+    "collecting counts from reduced conditional trees" with no tree traffic;
+  * targets (K axis)       -> sharded over the 'model' mesh axis: devices hold
+    disjoint target blocks, so the count matrix never materializes globally
+    (multitude-targeted = K can be millions).
+
+Scaling: work O(N·K·W / P) per device, comm O(K·C / model_size) per level —
+independent of N.  At 1000+ nodes the N axis shards freely (transactions are
+i.i.d. rows); elasticity = re-encode shard boundaries, nothing else changes.
+
+Fault tolerance: level-synchronous mining checkpoints (level index + frequent
+frontier + accumulated counts) via MiningCheckpoint — a restart (possibly on a
+DIFFERENT mesh shape) resumes from the last completed level.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import tempfile
+from dataclasses import dataclass
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels.itemset_count import itemset_counts
+from .encode import ItemVocab, encode_targets
+
+Item = Hashable
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def distributed_counts(
+    tx_bits: np.ndarray,      # (N, W) uint32 (host; will be sharded)
+    tgt_bits: np.ndarray,     # (K, W) uint32
+    weights: np.ndarray,      # (N, C) int32
+    mesh: Mesh,
+    *,
+    data_axes: Tuple[str, ...] = ("data",),
+    model_axis: Optional[str] = "model",
+    use_kernel: bool = True,
+) -> np.ndarray:              # (K, C) int32
+    """Exact counts on a mesh: N over data axes, K over the model axis."""
+    k, w = tgt_bits.shape
+    n, c = weights.shape
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    msize = mesh.shape[model_axis] if model_axis else 1
+
+    n_pad = _round_up(max(n, 1), dsize)
+    k_pad = _round_up(max(k, 1), msize)
+    tx_p = np.zeros((n_pad, tx_bits.shape[1]), np.uint32)
+    tx_p[:n] = tx_bits
+    w_p = np.zeros((n_pad, c), np.int32)
+    w_p[:n] = weights
+    tgt_p = np.zeros((k_pad, w), np.uint32)
+    tgt_p[:k] = tgt_bits
+
+    tx_spec = P(data_axes, None)
+    tgt_spec = P(model_axis, None)
+    w_spec = P(data_axes, None)
+    out_spec = P(model_axis, None)
+
+    @functools.partial(
+        jax.jit,
+        static_argnames=(),
+        in_shardings=(NamedSharding(mesh, tx_spec), NamedSharding(mesh, tgt_spec),
+                      NamedSharding(mesh, w_spec)),
+        out_shardings=NamedSharding(mesh, out_spec),
+    )
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(tx_spec, tgt_spec, w_spec), out_specs=out_spec,
+        check_vma=False,  # pallas_call out_shape carries no vma annotation
+    )
+    def count_shard(tx, tgt, wts):
+        local = itemset_counts(tx, tgt, wts, use_kernel=use_kernel)
+        return jax.lax.psum(local, data_axes)
+
+    out = np.asarray(count_shard(jnp.asarray(tx_p), jnp.asarray(tgt_p),
+                                 jnp.asarray(w_p)))
+    return out[:k]
+
+
+@dataclass
+class MiningCheckpoint:
+    """Restartable state of a level-synchronous distributed mine."""
+    path: str
+
+    def save(self, level: int, frequent: Dict[Tuple[Item, ...], int],
+             meta: Optional[dict] = None) -> None:
+        tmp = self.path + ".tmp"
+        payload = {
+            "level": level,
+            "frequent": [[list(k), int(v)] for k, v in frequent.items()],
+            "meta": meta or {},
+        }
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self.path)  # atomic
+
+    def load(self) -> Optional[Tuple[int, Dict[Tuple[Item, ...], int], dict]]:
+        if not os.path.exists(self.path):
+            return None
+        with open(self.path) as f:
+            payload = json.load(f)
+        freq = {tuple(k): v for k, v in payload["frequent"]}
+        return payload["level"], freq, payload.get("meta", {})
+
+
+class DistributedMiner:
+    """Level-synchronous exact frequent-itemset mining over a mesh, with
+    optional per-level checkpointing (fault tolerance) and elastic resume."""
+
+    def __init__(self, mesh: Mesh, *, data_axes: Tuple[str, ...] = ("data",),
+                 model_axis: Optional[str] = "model", use_kernel: bool = True,
+                 checkpoint: Optional[MiningCheckpoint] = None):
+        self.mesh = mesh
+        self.data_axes = data_axes
+        self.model_axis = model_axis
+        self.use_kernel = use_kernel
+        self.checkpoint = checkpoint
+
+    def counts(self, tx_bits, tgt_bits, weights) -> np.ndarray:
+        return distributed_counts(
+            tx_bits, tgt_bits, weights, self.mesh,
+            data_axes=self.data_axes, model_axis=self.model_axis,
+            use_kernel=self.use_kernel)
+
+    def gfp_counts(
+        self,
+        tis,                       # repro.core.TISTree
+        tx_bits: np.ndarray,
+        weights: np.ndarray,
+        vocab: ItemVocab,
+    ) -> Dict[Tuple[Item, ...], np.ndarray]:
+        """The GFP-growth contract, distributed: counts for all TIS targets."""
+        targets, keys, zeros = [], [], []
+        for node in tis.targets():
+            itemset = node.itemset()
+            key = tuple(sorted(itemset, key=repr))
+            if all(a in vocab for a in itemset):
+                targets.append(itemset)
+                keys.append(key)
+            else:
+                zeros.append(key)
+        out = {k: np.zeros(weights.shape[1], np.int32) for k in zeros}
+        if targets:
+            masks = encode_targets(targets, vocab)
+            rows = self.counts(tx_bits, masks, weights)
+            for key, row in zip(keys, rows):
+                out[key] = row
+        return out
+
+    def mine_frequent(
+        self,
+        tx_bits: np.ndarray,
+        weights: np.ndarray,
+        vocab: ItemVocab,
+        min_count: float,
+        *,
+        class_column: Optional[int] = None,
+        max_len: int = 0,
+    ) -> Dict[Tuple[Item, ...], int]:
+        from ..core.apriori import apriori_gen
+
+        start_level = 1
+        out: Dict[Tuple[Item, ...], int] = {}
+        frequent: set = set()
+
+        resumed = self.checkpoint.load() if self.checkpoint else None
+        if resumed is not None:
+            start_level, out, _ = resumed
+            out = {tuple(k): v for k, v in out.items()}
+            frequent = {frozenset(k) for k, v in out.items()
+                        if len(k) == start_level}
+        else:
+            # level 1: per-item counts in one launch (single-bit targets)
+            singles = [(a,) for a in vocab.items]
+            if singles:
+                masks = encode_targets(singles, vocab)
+                rows = self.counts(tx_bits, masks, weights)
+                for (a,), row in zip(singles, rows):
+                    cnt = int(row.sum()) if class_column is None else int(row[class_column])
+                    if cnt >= min_count:
+                        out[(a,)] = cnt
+                        frequent.add(frozenset([a]))
+            if self.checkpoint:
+                self.checkpoint.save(1, out)
+
+        k = start_level
+        while frequent and (max_len == 0 or k < max_len):
+            cands = apriori_gen(frequent, k)
+            if not cands:
+                break
+            itemsets = [tuple(sorted(s, key=repr)) for s in cands]
+            masks = encode_targets(itemsets, vocab)
+            rows = self.counts(tx_bits, masks, weights)
+            frequent = set()
+            for itemset, row in zip(itemsets, rows):
+                cnt = int(row.sum()) if class_column is None else int(row[class_column])
+                if cnt >= min_count:
+                    frequent.add(frozenset(itemset))
+                    out[itemset] = cnt
+            k += 1
+            if self.checkpoint:
+                self.checkpoint.save(k, out)
+        return out

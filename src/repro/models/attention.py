@@ -1,0 +1,237 @@
+"""GQA attention: qk-norm, RoPE, chunked (sub-quadratic-memory) softmax,
+KV caches with split-KV decode, cross-attention for the enc-dec arch.
+
+Sharding strategies (selected per shape, no head padding ever):
+  * 'heads'  — classic Megatron TP: q-heads over 'model' (requires
+    n_heads % model_axis == 0); KV is repeated to full heads (cheap at
+    train/prefill block sizes).
+  * 'kv_seq' — split-KV: the key/value sequence axis over 'model'
+    (flash-decoding style).  Used for all decode steps and for archs whose
+    head counts don't divide the mesh (56, 40, 36 on a 16-way axis) —
+    this keeps MODEL/HLO FLOPs ratio at 1.0 instead of padding heads.
+Chunked attention scans over q blocks so the score tile is
+(B, H, q_block, S_kv) — never the full S×S matrix.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import sharding as shd
+from .common import ParamSpec, apply_rope, rmsnorm
+
+
+def attn_specs(cfg, cross: bool = False) -> Dict[str, ParamSpec]:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    specs = {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        specs["q_norm"] = ParamSpec((dh,), ("norm",), init="ones")
+        specs["k_norm"] = ParamSpec((dh,), ("norm",), init="ones")
+    return specs
+
+
+def _heads_shardable(cfg) -> bool:
+    if not shd.active() or cfg.force_kv_seq_attn:
+        return False
+    mesh = shd._CTX.mesh
+    ms = mesh.shape.get("model", 1)
+    return cfg.n_heads % ms == 0
+
+
+def _project_qkv(params, xq, xkv, cfg, q_positions, kv_positions,
+                 rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", xkv, params["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", xkv, params["wv"])
+    if "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_block(qb, k, v, q_pos_b, kv_pos, causal: bool, scale: float,
+                kv_seq_axis: Optional[str]):
+    """One q-block of grouped attention.  qb (B,Q,KV,G,dh); k/v (B,S,KV,dh)."""
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qb, k) * scale
+    if kv_seq_axis is not None:
+        scores = shd.constrain(scores, "act_batch", None, None, None, kv_seq_axis)
+    scores = scores.astype(jnp.float32)
+    if causal:
+        mask = q_pos_b[:, None] >= kv_pos[None, :]             # (Q, S)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    else:
+        mask = kv_pos >= 0                                      # padding mask
+        scores = jnp.where(mask[None, None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out
+
+
+def grouped_attention(q, k, v, *, q_positions, kv_positions, causal: bool,
+                      cfg, kv_seq_axis: Optional[str] = None) -> jax.Array:
+    """q (B,Sq,H,dh), k/v (B,Skv,KV,dh) -> (B,Sq,H,dh); scans q blocks."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = dh ** -0.5
+    qg = q.reshape(b, sq, kvh, g, dh)
+
+    blk = min(cfg.attn_block_q, sq)
+    if sq % blk != 0:
+        blk = sq  # tiny/ragged: single block
+    nblk = sq // blk
+
+    if nblk == 1:
+        out = _sdpa_block(qg, k, v, q_positions[0] if q_positions.ndim > 1 else q_positions,
+                          kv_positions, causal, scale, kv_seq_axis)
+        return out.reshape(b, sq, h, dh)
+
+    qg = qg.reshape(b, nblk, blk, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpos = q_positions.reshape(nblk, blk)
+
+    def step(_, inp):
+        qb, qp = inp
+        ob = _sdpa_block(qb, k, v, qp, kv_positions, causal, scale, kv_seq_axis)
+        return None, ob
+
+    _, outs = jax.lax.scan(step, None, (qg, qpos))     # (nblk, B, blk, KV, G, dh)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, dh)
+    return out
+
+
+def repeated_heads_attention(q, k, v, *, q_positions, kv_positions,
+                             causal: bool, cfg) -> jax.Array:
+    """'heads' strategy: repeat KV to H and shard heads over 'model'."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    # Gather the seq axis BEFORE fanning out to heads: S-sharded -> replicated
+    # is one all-gather; S-sharded -> heads-sharded directly makes GSPMD fall
+    # back to "involuntary full rematerialization" (replicate via copy).
+    k = shd.constrain(k, "act_batch", None, None, None)
+    v = shd.constrain(v, "act_batch", None, None, None)
+    q = shd.constrain(q, "act_batch", None, "act_heads", None)
+    k = jnp.repeat(k, h // kvh, axis=2)
+    v = jnp.repeat(v, h // kvh, axis=2)
+    k = shd.constrain(k, "act_batch", None, "act_heads", None)
+    v = shd.constrain(v, "act_batch", None, "act_heads", None)
+    scale = dh ** -0.5
+
+    blk = min(cfg.attn_block_q, sq)
+    if sq % blk != 0:
+        blk = sq
+    nblk = sq // blk
+
+    def block(qb, qp):
+        scores = (jnp.einsum("bqhd,bshd->bhqs", qb, k) * scale).astype(jnp.float32)
+        if causal:
+            mask = qp[:, None] >= kv_positions[None, :]
+            scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+    if nblk == 1:
+        return block(q, q_positions)
+    qb = q.reshape(b, nblk, blk, h, dh).transpose(1, 0, 2, 3, 4)
+    qpos = q_positions.reshape(nblk, blk)
+    _, outs = jax.lax.scan(lambda _, inp: (None, block(*inp)), None, (qb, qpos))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def attn_forward(params, x: jax.Array, cfg, positions: jax.Array,
+                 causal: bool = True) -> jax.Array:
+    """Full-sequence self-attention (train / prefill)."""
+    if _heads_shardable(cfg):
+        # heads strategy: ONE sequence-parallel all-gather feeds q, k and v
+        # projections (kv_seq strategy keeps x seq-sharded: k/v inherit the
+        # shard, only q is gathered inside the blockwise attention).
+        x = shd.constrain(x, "act_batch", None, "act_embed")
+    q, k, v = _project_qkv(params, x, x, cfg, positions, positions)
+    if _heads_shardable(cfg):
+        out = repeated_heads_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=causal, cfg=cfg)
+    else:
+        out = grouped_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=causal, cfg=cfg, kv_seq_axis="act_kv_seq")
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return shd.constrain(y, "act_batch", "act_seq", "act_embed")
+
+
+def cross_attn_forward(params, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                       cfg, enc_positions: jax.Array) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (no RoPE)."""
+    b, sq, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k, v = enc_kv
+    out = grouped_attention(
+        q, k, v, q_positions=jnp.arange(sq), kv_positions=enc_positions,
+        causal=False, cfg=cfg, kv_seq_axis="act_kv_seq")
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return shd.constrain(y, "act_batch", "act_seq", "act_embed")
+
+
+def cross_kv(params, enc_out: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dnk->bsnk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", enc_out, params["wv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+def kv_cache_logical(batch: int, dp_size: int) -> str:
+    """Cache seq axis: split-KV over 'model'; the 524k batch=1 cell also folds
+    'data' in (the batch axis is idle there)."""
+    return "act_kv_seq_long" if batch < dp_size else "act_kv_seq"
+
+
+def init_cache_specs(cfg, batch: int, max_len: int, dp_size: int):
+    """ShapeDtypeStruct specs for one layer's KV cache."""
+    kv_ax = kv_cache_logical(batch, dp_size)
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    logical = ("act_batch", kv_ax, None, None)
+    return {"k": (shape, logical), "v": (shape, logical)}
+
+
+def attn_decode(params, x: jax.Array, cache: Dict[str, jax.Array], cfg,
+                pos: jax.Array):
+    """One-token decode.  x (B,1,D); cache k/v (B,Smax,KV,dh); pos () int32.
+    Returns (y, new_cache)."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        params, x, x, cfg,
+        q_positions=jnp.full((1,), pos, jnp.int32),
+        kv_positions=jnp.full((1,), pos, jnp.int32))
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, pos, 0, 0))
+    kv_ax = kv_cache_logical(b, _dp_size())
+    k = shd.constrain(k, "act_batch", kv_ax, None, None)
+    v = shd.constrain(v, "act_batch", kv_ax, None, None)
+    smax = k.shape[1]
+    kv_positions = jnp.where(jnp.arange(smax) <= pos, jnp.arange(smax), -1)
+    out = grouped_attention(
+        q, k, v, q_positions=jnp.full((1,), pos, jnp.int32),
+        kv_positions=kv_positions, causal=False, cfg=cfg, kv_seq_axis=kv_ax)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k, "v": v}
+
+
+def _dp_size() -> int:
+    if not shd.active():
+        return 1
+    mesh = shd._CTX.mesh
+    return int(mesh.shape.get("data", 1) * mesh.shape.get("pod", 1))

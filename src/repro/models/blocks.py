@@ -1,0 +1,158 @@
+"""Transformer/SSM block assembly: pre-norm residual blocks with attention or
+SSD mixers and dense / MoE (+dense-residual) MLPs; scan-compatible stacking,
+including heterogeneous 'superblocks' (jamba's 1-attention-per-8-layers)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import sharding as shd
+from .attention import (attn_decode, attn_forward, attn_specs, cross_attn_forward,
+                        cross_kv, init_cache_specs)
+from .common import ParamSpec, rmsnorm, stack_specs
+from .mlp import mlp_forward, mlp_specs
+from .moe import moe_forward, moe_specs
+from .ssm import init_ssm_state_specs, ssm_forward, ssm_specs
+
+
+def _norm_spec(cfg) -> ParamSpec:
+    return ParamSpec((cfg.d_model,), ("norm",), init="ones")
+
+
+def layer_specs(cfg, kind: str, mlp_kind: str, cross: bool = False) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {"ln1": _norm_spec(cfg), "ln2": _norm_spec(cfg)}
+    if kind == "attn":
+        specs["attn"] = attn_specs(cfg)
+    else:
+        specs["ssm"] = ssm_specs(cfg)
+    if mlp_kind == "moe":
+        specs["moe"] = moe_specs(cfg)
+        if cfg.dense_residual:
+            specs["mlp"] = mlp_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs(cfg)
+    if cross:
+        specs["ln_cross"] = _norm_spec(cfg)
+        specs["cross"] = attn_specs(cfg, cross=True)
+    return specs
+
+
+def layer_forward(p, x, cfg, kind: str, mlp_kind: str, positions,
+                  causal: bool = True,
+                  enc_kv: Optional[Tuple] = None,
+                  enc_positions=None) -> jax.Array:
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        a = attn_forward(p["attn"], h, cfg, positions, causal=causal)
+    else:
+        a = ssm_forward(p["ssm"], h, cfg)
+    x = x + a
+    if enc_kv is not None:
+        h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + cross_attn_forward(p["cross"], h, enc_kv, cfg, enc_positions)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if mlp_kind == "moe":
+        m = moe_forward(p["moe"], h, cfg)
+        if cfg.dense_residual:
+            m = m + mlp_forward(p["mlp"], h)
+    else:
+        m = mlp_forward(p["mlp"], h)
+    x = x + m
+    return shd.constrain(x, "act_batch", "act_seq", "act_embed")
+
+
+def layer_decode(p, x, cfg, kind: str, mlp_kind: str, cache, pos,
+                 enc_kv: Optional[Tuple] = None, enc_positions=None):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        a, cache = attn_decode(p["attn"], h, cache, cfg, pos)
+    else:
+        a, cache = ssm_forward(p["ssm"], h, cfg, state=cache, pos=pos)
+    x = x + a
+    if enc_kv is not None:
+        h = rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + cross_attn_forward(p["cross"], h, enc_kv, cfg, enc_positions)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if mlp_kind == "moe":
+        m = moe_forward(p["moe"], h, cfg)
+        if cfg.dense_residual:
+            m = m + mlp_forward(p["mlp"], h)
+    else:
+        m = mlp_forward(p["mlp"], h)
+    return x + m, cache
+
+
+# ---------------------------------------------------------------------------
+# scan units: a 'unit' is either one layer or one superblock of layers
+# ---------------------------------------------------------------------------
+
+def unit_layout(cfg) -> Tuple[int, Tuple[Tuple[str, str], ...]]:
+    """-> (n_units, ((kind, mlp_kind) per layer inside a unit))."""
+    sb = cfg.superblock or (cfg.moe_every if cfg.is_moe and cfg.moe_every > 1 else 1)
+    assert cfg.n_layers % sb == 0, (cfg.n_layers, sb)
+    layout = tuple((cfg.layer_kind(i), cfg.mlp_kind(i)) for i in range(sb))
+    return cfg.n_layers // sb, layout
+
+
+def unit_specs(cfg, cross: bool = False) -> Dict[str, Any]:
+    _, layout = unit_layout(cfg)
+    if len(layout) == 1:
+        kind, mlp_kind = layout[0]
+        return layer_specs(cfg, kind, mlp_kind, cross=cross)
+    return {f"layer{i}": layer_specs(cfg, k, m, cross=cross)
+            for i, (k, m) in enumerate(layout)}
+
+
+def stack_unit_specs(cfg, cross: bool = False) -> Dict[str, Any]:
+    n_units, _ = unit_layout(cfg)
+    return stack_specs(unit_specs(cfg, cross=cross), n_units)
+
+
+def unit_forward(p, x, cfg, positions, causal=True, enc_kv=None,
+                 enc_positions=None) -> jax.Array:
+    _, layout = unit_layout(cfg)
+    if len(layout) == 1:
+        kind, mlp_kind = layout[0]
+        return layer_forward(p, x, cfg, kind, mlp_kind, positions, causal,
+                             enc_kv, enc_positions)
+    for i, (kind, mlp_kind) in enumerate(layout):
+        def one(pp, hh, kind=kind, mlp_kind=mlp_kind):
+            return layer_forward(pp, hh, cfg, kind, mlp_kind, positions,
+                                 causal, enc_kv, enc_positions)
+        if cfg.remat:
+            # per-LAYER remat inside heterogeneous superblocks: a superblock-
+            # level checkpoint keeps all 8 layers' SSD Q^2 tensors live during
+            # the unit's backward (~150 GiB/device for jamba train_4k).
+            one = jax.checkpoint(one)
+        x = one(p[f"layer{i}"], x)
+    return x
+
+
+def unit_decode(p, x, cfg, cache, pos, enc_kv=None, enc_positions=None):
+    _, layout = unit_layout(cfg)
+    if len(layout) == 1:
+        kind, mlp_kind = layout[0]
+        return layer_decode(p, x, cfg, kind, mlp_kind, cache, pos,
+                            enc_kv, enc_positions)
+    new_cache = {}
+    for i, (kind, mlp_kind) in enumerate(layout):
+        key = f"layer{i}"
+        x, new_cache[key] = layer_decode(p[key], x, cfg, kind, mlp_kind,
+                                         cache[key], pos, enc_kv, enc_positions)
+    return x, new_cache
+
+
+def unit_cache_specs(cfg, batch: int, max_len: int, dp_size: int):
+    """Cache structure for one scan unit (pre-stacking)."""
+    _, layout = unit_layout(cfg)
+
+    def one(kind: str):
+        if kind == "attn":
+            return init_cache_specs(cfg, batch, max_len, dp_size)
+        return init_ssm_state_specs(cfg, batch)
+
+    if len(layout) == 1:
+        return one(layout[0][0])
+    return {f"layer{i}": one(k) for i, (k, _) in enumerate(layout)}

@@ -1,0 +1,152 @@
+"""Shared model machinery: spec-driven parameters, norms, RoPE, embeddings.
+
+Parameters are declared as ``ParamSpec`` trees (shape + logical axes + init).
+One source of truth yields (a) real initialized params, (b) allocation-free
+ShapeDtypeStructs for the dry-run, and (c) NamedShardings via the logical
+rules in repro.parallel.sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel import sharding as shd
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def stack_specs(specs: Any, n: int) -> Any:
+    """Prefix a scan ('layers') axis onto every spec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.init, s.scale),
+        specs, is_leaf=is_spec)
+
+
+def init_params(specs: Any, key: jax.Array, dtype: jnp.dtype) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dtype))
+        else:
+            fan_in = s.shape[0] if len(s.shape) > 1 else 1
+            std = s.scale if s.init == "normal" else 1.0 / np.sqrt(fan_in)
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs: Any, dtype: jnp.dtype, mesh=None) -> Any:
+    """ShapeDtypeStructs (+ shardings when a mesh is given) — dry-run inputs."""
+    def mk(s: ParamSpec):
+        if mesh is not None:
+            ns = shd.named_sharding(s.logical, shape=s.shape, mesh=mesh)
+            return jax.ShapeDtypeStruct(s.shape, dtype, sharding=ns)
+        return jax.ShapeDtypeStruct(s.shape, dtype)
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def param_shardings(specs: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: shd.named_sharding(s.logical, shape=s.shape, mesh=mesh),
+        specs, is_leaf=is_spec)
+
+
+def param_count(specs: Any) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with f32 *reduction* but bf16 activation tensors.
+
+    Materializing x in f32 (the textbook formulation) makes GSPMD place
+    sequence-parallel reshards on f32 activation tensors — 2x collective and
+    HBM bytes on every layer boundary.  Only the (B,S,1) variance is f32 here;
+    the (B,S,D) tensors stay in the model dtype.
+    """
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale
+
+
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                                  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding (vocab padded to /256 for clean TP)
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg) -> Dict[str, ParamSpec]:
+    vpad = round_up(cfg.vocab_size, 256)
+    return {
+        "tok_embed": ParamSpec((vpad, cfg.d_model), ("vocab_in", "embed_tbl")),
+        "lm_head": ParamSpec((cfg.d_model, vpad), ("embed", "vocab_out")),
+        "final_norm": ParamSpec((cfg.d_model,), ("norm",), init="ones"),
+    }
+
+
+def embed_tokens(params, tokens: jax.Array, cfg) -> jax.Array:
+    """tokens (B, S) -> (B, S, D).  Table cols are TP-sharded; the gather is
+    local (indices replicated over 'model')."""
+    emb = jnp.take(params["tok_embed"], tokens, axis=0)
+    return shd.constrain(emb, "act_batch", "act_seq", "act_embed")
+
+
+def lm_logits(params, x: jax.Array, cfg) -> jax.Array:
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return shd.constrain(logits, "act_batch", None, "act_vocab")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, vocab_size: int) -> jax.Array:
+    """Mean token cross-entropy; padded vocab tail masked out."""
+    logits = logits.astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vpad != vocab_size:
+        neg = jnp.full((vpad - vocab_size,), -1e30, jnp.float32)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((vocab_size,), jnp.float32), neg])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,30 @@
+"""Dense SwiGLU MLP."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import jax
+
+from ..parallel import sharding as shd
+from .common import ParamSpec
+
+
+def mlp_specs(cfg, d_ff: int = 0) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "ffn")),
+        "w_up": ParamSpec((d, f), ("embed", "ffn")),
+        "w_down": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp_forward(params, x: jnp.ndarray) -> jnp.ndarray:
+    # ONE sequence-parallel all-gather feeds both gate and up matmuls.
+    x = shd.constrain(x, "act_batch", None, "act_embed")
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = shd.constrain(h, "act_batch", None, "act_ffn")
+    y = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    # model-sharded contraction + seq-sharded output => reduce-scatter
+    return shd.constrain(y, "act_batch", "act_seq", "act_embed")

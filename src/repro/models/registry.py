@@ -1,0 +1,63 @@
+"""Model API facade: everything launchers/tests need for one architecture."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .common import abstract_params, init_params, param_count, param_shardings
+from .config import ModelConfig, ShapeSpec
+
+
+class Model:
+    """Thin functional wrapper binding a ModelConfig to the assembly fns."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.specs = transformer.model_specs(cfg)
+
+    # -- params ----------------------------------------------------------
+    def init(self, key: jax.Array):
+        return init_params(self.specs, key, jnp.dtype(self.cfg.dtype))
+
+    def abstract(self, mesh=None):
+        return abstract_params(self.specs, jnp.dtype(self.cfg.dtype), mesh=mesh)
+
+    def shardings(self, mesh):
+        return param_shardings(self.specs, mesh)
+
+    def n_params(self) -> int:
+        return param_count(self.specs)
+
+    # -- compute ----------------------------------------------------------
+    def loss(self, params, batch):
+        return transformer.train_loss(params, batch, self.cfg)
+
+    def forward(self, params, tokens, frames=None):
+        return transformer.forward(params, tokens, self.cfg, frames=frames)
+
+    def prefill(self, params, tokens, max_len: int, frames=None, dp_size: int = 1):
+        return transformer.prefill(params, tokens, self.cfg, max_len,
+                                   frames=frames, dp_size=dp_size)
+
+    def decode_step(self, params, cache, token, pos):
+        return transformer.decode_step(params, cache, token, pos, self.cfg)
+
+    def cache_specs(self, batch: int, max_len: int, dp_size: int = 1):
+        return transformer.cache_specs(self.cfg, batch, max_len, dp_size)
+
+    def init_cache(self, batch: int, max_len: int, dp_size: int = 1):
+        return transformer.init_cache(self.cfg, batch, max_len,
+                                      jnp.dtype(self.cfg.dtype), dp_size)
+
+
+@functools.lru_cache(maxsize=None)
+def get_model(arch: str, reduced: bool = False) -> Model:
+    from ..configs import get_config
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    return Model(cfg)

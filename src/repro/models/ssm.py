@@ -1,0 +1,205 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked quadratic-within-chunk /
+linear-across-chunks algorithm (arXiv:2405.21060), plus O(1)-state decode.
+
+Shapes: d_inner = expand*d_model, nh = d_inner/headdim heads, state N,
+g groups for B/C (expanded to heads).  TPU mapping: heads over 'model' (TP),
+batch over ('pod','data'); the inter-chunk recurrence is a lax.scan (HLO stays
+small); the intra-chunk part is dense matmuls (MXU-friendly) — this is the
+TPU-native answer to the paper family's "selective scan" CUDA kernels.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import sharding as shd
+from .common import ParamSpec, rmsnorm
+
+
+def ssm_specs(cfg) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di, n, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    w = cfg.conv_width
+    return {
+        "wz": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, di), ("embed", "ssm_inner")),
+        "wB": ParamSpec((d, g, n), ("embed", None, "ssm_state")),
+        "wC": ParamSpec((d, g, n), ("embed", None, "ssm_state")),
+        "wdt": ParamSpec((d, nh), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((w, di), (None, "conv_chan")),
+        "conv_B": ParamSpec((w, g, n), (None, None, "ssm_state")),
+        "conv_C": ParamSpec((w, g, n), (None, None, "ssm_state")),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "gate_norm": ParamSpec((di,), ("norm",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv along axis 1.  x (B,S,C...), w (W,C...)."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, [(0, 0), (i, 0)] + [(0, 0)] * (x.ndim - 2))[:, : x.shape[1]]
+        out = out + shifted * w[width - 1 - i]
+    return out
+
+
+def _conv_step(state: jax.Array, xt: jax.Array, w: jax.Array):
+    """Single-token causal conv.  state (B,W-1,C...), xt (B,C...)."""
+    hist = jnp.concatenate([state, xt[:, None]], axis=1)       # (B,W,C..)
+    y = jnp.einsum("bw...,w...->b...", hist, w)
+    return hist[:, 1:], y
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA (..., Q, nh) -> decay matrix (..., nh, Q, Q): exp(sum_{j<i<=q} dA)."""
+    q = dA.shape[-2]
+    cs = jnp.cumsum(dA, axis=-2)                               # (..., Q, nh)
+    diff = cs[..., :, None, :] - cs[..., None, :, :]           # (..., Q, Q, nh)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    diff = jnp.moveaxis(diff, -1, -3)                          # (..., nh, Q, Q)
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int):
+    """Chunked SSD.  x (B,L,nh,P); dt (B,L,nh); A (nh,);
+    B/C (B,L,nh,N) (already head-expanded).  Returns y (B,L,nh,P) and the
+    final state (B,nh,N,P)."""
+    b, l, nh, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    if l % q != 0:
+        q = l
+    nc = l // q
+
+    xr = x.reshape(b, nc, q, nh, p)
+    dtr = dt.reshape(b, nc, q, nh)
+    Br = B.reshape(b, nc, q, nh, n)
+    Cr = C.reshape(b, nc, q, nh, n)
+    dA = dtr * A[None, None, None, :]                          # (b,nc,q,nh)
+
+    xdt = xr * dtr[..., None]
+    Lmat = _segsum(dA.astype(jnp.float32)).astype(x.dtype)     # (b,nc,nh,q,q)
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", Cr, Br)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", cb * Lmat, xdt)
+
+    cs = jnp.cumsum(dA.astype(jnp.float32), axis=2)            # (b,nc,q,nh)
+    decay_out = jnp.exp(cs[:, :, -1:, :] - cs).astype(x.dtype) # (b,nc,q,nh)
+    states = jnp.einsum("bcqhn,bcqhp->bchnp", Br * decay_out[..., None], xdt)
+    chunk_decay = jnp.exp(cs[:, :, -1, :]).astype(x.dtype)     # (b,nc,nh)
+
+    def step(s, inp):
+        st_c, dec_c = inp                                      # (b,nh,n,p), (b,nh)
+        s_new = s * dec_c[..., None, None] + st_c
+        return s_new, s                                        # emit state ENTERING chunk
+
+    s0 = jnp.zeros((b, nh, n, p), x.dtype)
+    s_final, s_in = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)                       # (b,nc,nh,n,p)
+
+    decay_in = jnp.exp(cs).astype(x.dtype)                     # (b,nc,q,nh)
+    y_off = jnp.einsum("bcqhn,bchnp->bcqhp", Cr * decay_in[..., None], s_in)
+    y = (y_diag + y_off).reshape(b, l, nh, p)
+    return y, s_final
+
+
+def _head_expand(t: jax.Array, nh: int) -> jax.Array:
+    """(B,L,G,N) group tensor -> (B,L,nh,N) head tensor."""
+    g = t.shape[2]
+    return jnp.repeat(t, nh // g, axis=2)
+
+
+def ssm_forward(params, xin: jax.Array, cfg,
+                state: Optional[Dict[str, jax.Array]] = None,
+                pos: Optional[jax.Array] = None):
+    """Full-sequence SSD (train/prefill).  xin (B,S,D) -> (B,S,D).
+    If ``state`` is given, behaves as a single-step decode (S==1)."""
+    if state is not None:
+        return _ssm_decode(params, xin, cfg, state, pos)
+    b, s, d = xin.shape
+    nh, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+
+    # ONE sequence-parallel all-gather feeds all five projections (z, x, B,
+    # C, dt) — per-matmul reshards were the dominant collective in the
+    # mamba2 train_4k baseline (t_coll 10x t_compute).
+    xin = shd.constrain(xin, "act_batch", None, "act_embed")
+    z = jnp.einsum("bsd,de->bse", xin, params["wz"])
+    x = jnp.einsum("bsd,de->bse", xin, params["wx"])
+    Bm = jnp.einsum("bsd,dgn->bsgn", xin, params["wB"])
+    Cm = jnp.einsum("bsd,dgn->bsgn", xin, params["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", xin, params["wdt"])
+
+    x = jax.nn.silu(_causal_conv(x, params["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, params["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, params["conv_C"]))
+    x = shd.constrain(x, "act_batch", None, "act_ffn")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32)).astype(xin.dtype)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32)).astype(xin.dtype)
+
+    xh = x.reshape(b, s, nh, p)
+    xh = shd.constrain(xh, "act_batch", None, "act_ssm_heads", None)
+    Bh = _head_expand(Bm, nh)
+    Ch = _head_expand(Cm, nh)
+
+    y, _ = ssd_scan(xh, dt, A, Bh, Ch, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(b, s, nh * p)
+    y = rmsnorm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y.reshape(b * s, nh * p),
+                     params["out_proj"]).reshape(b, s, d)
+    return shd.constrain(out, "act_batch", "act_seq", "act_embed")
+
+
+def init_ssm_state_specs(cfg, batch: int):
+    """Decode-state specs for one SSM layer."""
+    nh, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    g, w, di = cfg.ssm_groups, cfg.conv_width, cfg.d_inner
+    return {
+        "ssd": ((batch, nh, n, p), ("act_batch", "act_ssm_heads", None, None)),
+        "conv_x": ((batch, w - 1, di), ("act_batch", None, "conv_chan")),
+        "conv_B": ((batch, w - 1, g, n), ("act_batch", None, None, None)),
+        "conv_C": ((batch, w - 1, g, n), ("act_batch", None, None, None)),
+    }
+
+
+def _ssm_decode(params, xin, cfg, state, pos):
+    """Single-token SSD decode.  xin (B,1,D)."""
+    b = xin.shape[0]
+    nh, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xt = xin[:, 0]
+    z = xt @ params["wz"]
+    x = xt @ params["wx"]
+    Bm = jnp.einsum("bd,dgn->bgn", xt, params["wB"])
+    Cm = jnp.einsum("bd,dgn->bgn", xt, params["wC"])
+    dt = xt @ params["wdt"]
+
+    cx, x = _conv_step(state["conv_x"], x, params["conv_x"])
+    cB, Bm = _conv_step(state["conv_B"], Bm, params["conv_B"])
+    cC, Cm = _conv_step(state["conv_C"], Cm, params["conv_C"])
+    x, Bm, Cm = jax.nn.silu(x), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32)).astype(xin.dtype)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32)).astype(xin.dtype)
+
+    xh = x.reshape(b, nh, p)
+    Bh = jnp.repeat(Bm, nh // cfg.ssm_groups, axis=1)          # (B,nh,N)
+    Ch = jnp.repeat(Cm, nh // cfg.ssm_groups, axis=1)
+    decay = jnp.exp(dt * A[None, :])                            # (B,nh)
+    s_new = (state["ssd"] * decay[..., None, None] +
+             jnp.einsum("bhn,bhp->bhnp", Bh, xh * dt[..., None]))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, s_new) + params["D"][None, :, None] * xh
+    y = y.reshape(b, nh * p)
+    y = rmsnorm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None, :]
+    new_state = {"ssd": s_new, "conv_x": cx, "conv_B": cB, "conv_C": cC}
+    return shd.constrain(out, "act_batch", None, "act_embed"), new_state

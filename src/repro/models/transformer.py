@@ -1,0 +1,333 @@
+"""Model assembly: decoder-only LMs (dense/MoE/SSM/hybrid) and the
+encoder-decoder (audio) variant; train loss, prefill and decode entry points.
+
+The layer stack is a ``lax.scan`` over scan-units (single layers, or jamba's
+8-layer superblocks) — compile time and HLO size stay O(1) in depth.  Each
+unit body is rematerialized (``jax.checkpoint``) when cfg.remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel import sharding as shd
+from .blocks import (stack_unit_specs, unit_cache_specs, unit_decode,
+                     unit_forward, unit_layout)
+from .common import (ParamSpec, embed_specs, embed_tokens, lm_logits,
+                     rmsnorm, softmax_xent)
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = dict(embed_specs(cfg))
+    specs["decoder"] = stack_unit_specs(cfg, cross=cfg.encdec)
+    if cfg.encdec:
+        specs["enc_in_proj"] = ParamSpec((cfg.frontend_dim, cfg.d_model),
+                                         (None, "embed"))
+        enc_cfg = _enc_cfg(cfg)
+        specs["encoder"] = stack_unit_specs(enc_cfg)
+        specs["enc_norm"] = ParamSpec((cfg.d_model,), ("norm",), init="ones")
+    return specs
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, n_layers=cfg.n_enc_layers, encdec=False,
+                               superblock=0, attn_every=0, n_experts=0)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def scan_units(cfg, step, carry, xs):
+    """lax.scan over stacked units, or an unrolled Python loop when
+    cfg.unroll_stack (cost-analysis variants — a while-loop body is counted
+    once by XLA's cost model, hiding depth)."""
+    if not cfg.unroll_stack:
+        return jax.lax.scan(step, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = step(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def _scan_stack(cfg, params_stacked, x, body):
+    def step(carry, unit_params):
+        return body(carry, unit_params), None
+    x, _ = scan_units(cfg, step, x, params_stacked)
+    return x
+
+
+def _encode(params, frames: jax.Array, cfg) -> jax.Array:
+    """Stubbed modality frontend: precomputed frame/patch embeddings in,
+    encoder hidden states out."""
+    enc_cfg = _enc_cfg(cfg)
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(params["enc_in_proj"].dtype),
+                   params["enc_in_proj"])
+    x = shd.constrain(x, "act_batch", "act_seq", "act_embed")
+    s = frames.shape[1]
+    positions = jnp.arange(s)
+
+    def body(h, p):
+        fwd = functools.partial(unit_forward, cfg=enc_cfg, positions=positions,
+                                causal=False)
+        if cfg.remat:
+            fwd = jax.checkpoint(lambda pp, hh: unit_forward(
+                pp, hh, enc_cfg, positions, causal=False))
+            return fwd(p, h)
+        return unit_forward(p, h, enc_cfg, positions, causal=False)
+
+    x = _scan_stack(enc_cfg, params["encoder"], x, lambda h, p: body(h, p))
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens: jax.Array, cfg,
+            frames: Optional[jax.Array] = None) -> jax.Array:
+    """tokens (B,S) -> logits (B,S,Vpad).  ``frames`` feeds the encoder for
+    the enc-dec arch (stub frontend)."""
+    x = embed_tokens(params, tokens, cfg)
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+
+    enc_kv_args: Dict[str, Any] = {}
+    if cfg.encdec:
+        assert frames is not None
+        enc_out = _encode(params, frames, cfg)
+        enc_positions = jnp.arange(enc_out.shape[1])
+    else:
+        enc_out = None
+        enc_positions = None
+
+    from .blocks import unit_layout as _ul
+    _multi_layer_unit = len(_ul(cfg)[1]) > 1
+
+    def body(h, p):
+        def fwd(pp, hh):
+            enc_kv = None
+            if enc_out is not None:
+                from .attention import cross_kv
+                enc_kv = cross_kv(pp["cross"], enc_out)
+            return unit_forward(pp, hh, cfg, positions, causal=True,
+                                enc_kv=enc_kv, enc_positions=enc_positions)
+        if cfg.remat and not _multi_layer_unit:
+            # single-layer units checkpoint here; multi-layer superblocks
+            # checkpoint per-layer inside unit_forward (memory, see blocks.py)
+            return jax.checkpoint(fwd)(p, h)
+        return fwd(p, h)
+
+    x = _scan_stack(cfg, params["decoder"], x, body)
+    return lm_logits(params, x, cfg)
+
+
+def train_loss(params, batch: Dict[str, jax.Array], cfg) -> jax.Array:
+    logits = forward(params, batch["tokens"], cfg, frames=batch.get("frames"))
+    return softmax_xent(logits, batch["labels"], cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg, batch: int, max_len: int, dp_size: int = 1):
+    """Pytree of (shape, logical_axes) for the stacked decode state."""
+    n_units, _ = unit_layout(cfg)
+    unit = unit_cache_specs(cfg, batch, max_len, dp_size)
+
+    def stack(leaf):
+        shape, logical = leaf
+        return ((n_units,) + shape, ("layers",) + logical)
+
+    out = jax.tree.map(stack, unit,
+                       is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                       and isinstance(x[0], tuple))
+    extra = {}
+    if cfg.encdec:
+        kvshape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+        extra["enc_k"] = ((n_units,) + kvshape,
+                          ("layers", "act_batch", "act_kv_seq", None, None))
+        extra["enc_v"] = ((n_units,) + kvshape,
+                          ("layers", "act_batch", "act_kv_seq", None, None))
+        extra["enc_len"] = ((), ())
+    return {"units": out, **extra}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype, dp_size: int = 1):
+    specs = cache_specs(cfg, batch, max_len, dp_size)
+
+    def mk(leaf):
+        shape, _ = leaf
+        return jnp.zeros(shape, dtype)
+
+    return jax.tree.map(mk, specs,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and isinstance(x[0], tuple))
+
+
+def prefill(params, tokens: jax.Array, cfg, max_len: int,
+            frames: Optional[jax.Array] = None, dp_size: int = 1):
+    """Run the full prompt, return (last-token logits, populated cache).
+
+    The prefill KV cache is built by running full-sequence attention and then
+    writing K/V into the cache buffers unit-by-unit (scan)."""
+    b, s = tokens.shape
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(s)
+    cache = init_cache(cfg, b, max_len, x.dtype, dp_size)
+
+    enc_out = None
+    enc_positions = None
+    if cfg.encdec:
+        assert frames is not None
+        enc_out = _encode(params, frames, cfg)
+        enc_positions = jnp.arange(enc_out.shape[1])
+
+    _, layout = unit_layout(cfg)
+
+    def fill_unit(h, p, unit_cache):
+        """Forward one unit while capturing K/V + SSD final state."""
+        from .attention import _project_qkv, attn_forward, cross_kv
+        from .ssm import ssd_scan
+        new_cache = dict(unit_cache) if isinstance(unit_cache, dict) else unit_cache
+
+        def one_layer(pp, hh, kind, mlp_kind, lcache):
+            from .blocks import layer_forward
+            # capture kv BEFORE the layer transform (same projections)
+            hn = rmsnorm(hh, pp["ln1"], cfg.norm_eps)
+            if kind == "attn":
+                q, k, v = _project_qkv(pp["attn"], hn, hn, cfg, positions, positions)
+                lc = {
+                    "k": jax.lax.dynamic_update_slice(
+                        lcache["k"], k.astype(lcache["k"].dtype), (0, 0, 0, 0)),
+                    "v": jax.lax.dynamic_update_slice(
+                        lcache["v"], v.astype(lcache["v"].dtype), (0, 0, 0, 0)),
+                }
+            else:
+                lc = _capture_ssm_state(pp["ssm"], hn, cfg, lcache)
+            enc_kv = None
+            if enc_out is not None:
+                enc_kv = cross_kv(pp["cross"], enc_out)
+            hh = layer_forward(pp, hh, cfg, kind, mlp_kind, positions,
+                               causal=True, enc_kv=enc_kv,
+                               enc_positions=enc_positions)
+            return hh, lc
+
+        if len(layout) == 1:
+            kind, mlp_kind = layout[0]
+            h, nc = one_layer(p, h, kind, mlp_kind, unit_cache)
+            return h, nc
+        nc = {}
+        for i, (kind, mlp_kind) in enumerate(layout):
+            key = f"layer{i}"
+            h, nc[key] = one_layer(p[key], h, kind, mlp_kind, unit_cache[key])
+        return h, nc
+
+    def step(h, inp):
+        p, ucache = inp
+        h, nc = fill_unit(h, p, ucache)
+        return h, nc
+
+    scan_in = (params["decoder"], cache["units"])
+    x, new_units = scan_units(cfg, step, x, scan_in)
+    cache = {**cache, "units": new_units}
+
+    if cfg.encdec:
+        from .attention import cross_kv
+
+        def enc_kv_unit(_, p):
+            k, v = cross_kv(p["cross"], enc_out)
+            return None, (k, v)
+
+        _, (ek, ev) = scan_units(cfg, enc_kv_unit, None, params["decoder"])
+        pad = cache["enc_k"].shape[2] - ek.shape[2]
+        cache["enc_k"] = jnp.pad(ek, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["enc_v"] = jnp.pad(ev, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["enc_len"] = jnp.asarray(enc_out.shape[1], jnp.int32)
+
+    logits = lm_logits(params, x[:, -1:, :], cfg)
+    return logits, cache
+
+
+def _capture_ssm_state(p, xin, cfg, lcache):
+    """Recompute the SSD state at end-of-prompt for the decode cache.
+    ``xin`` is the ln1-normed layer input (identical to ssm_forward's)."""
+    from .ssm import _causal_conv, _head_expand, ssd_scan
+    b, s, _ = xin.shape
+    x = jnp.einsum("bsd,de->bse", xin, p["wx"])
+    Bm = jnp.einsum("bsd,dgn->bsgn", xin, p["wB"])
+    Cm = jnp.einsum("bsd,dgn->bsgn", xin, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", xin, p["wdt"])
+
+    def conv_tail(t):  # last (W-1) raw inputs, left-padded for short prompts
+        w1 = cfg.conv_width - 1
+        pad = [(0, 0), (w1, 0)] + [(0, 0)] * (t.ndim - 2)
+        return jnp.pad(t, pad)[:, t.shape[1]:]
+
+    cx, cB, cC = conv_tail(x), conv_tail(Bm), conv_tail(Cm)
+    x = jax.nn.silu(_causal_conv(x, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32)).astype(xin.dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(xin.dtype)
+    nh, hd = cfg.ssm_heads, cfg.ssm_headdim
+    xh = x.reshape(b, s, nh, hd)
+    _, s_final = ssd_scan(xh, dt, A, _head_expand(Bm, nh), _head_expand(Cm, nh),
+                          cfg.ssm_chunk)
+    return {"ssd": s_final.astype(lcache["ssd"].dtype),
+            "conv_x": cx.astype(lcache["conv_x"].dtype),
+            "conv_B": cB.astype(lcache["conv_B"].dtype),
+            "conv_C": cC.astype(lcache["conv_C"].dtype)}
+
+
+def decode_step(params, cache, token: jax.Array, pos: jax.Array, cfg):
+    """One decode step.  token (B,1) int32; pos () int32.
+    Returns (logits (B,1,Vpad), new cache)."""
+    x = embed_tokens(params, token, cfg)
+    enc_positions = None
+    if cfg.encdec:
+        smax = cache["enc_k"].shape[2]
+        idx = jnp.arange(smax)
+        enc_positions = jnp.where(idx < cache["enc_len"], idx, -1)
+
+    def step(h, inp):
+        p, ucache = inp
+        enc_kv = None
+        if cfg.encdec:
+            # per-unit encoder KV is carried in the scanned cache
+            enc_kv = (ucache["__enc_k"], ucache["__enc_v"])
+            ucache = {k: v for k, v in ucache.items() if not k.startswith("__")}
+        h, nc = unit_decode(p, h, cfg, ucache, pos,
+                            enc_kv=enc_kv, enc_positions=enc_positions)
+        if cfg.encdec:
+            nc = {**nc, "__enc_k": enc_kv[0], "__enc_v": enc_kv[1]}
+        return h, nc
+
+    units = cache["units"]
+    if cfg.encdec:
+        units = jax.tree.map(lambda x: x, units)
+        units = {**units, "__enc_k": cache["enc_k"], "__enc_v": cache["enc_v"]}
+    x, new_units = scan_units(cfg, step, x, (params["decoder"], units))
+    if cfg.encdec:
+        new_cache = {"units": {k: v for k, v in new_units.items()
+                               if not k.startswith("__")},
+                     "enc_k": cache["enc_k"], "enc_v": cache["enc_v"],
+                     "enc_len": cache["enc_len"]}
+    else:
+        new_cache = {"units": new_units}
+    logits = lm_logits(params, x, cfg)
+    return logits, new_cache

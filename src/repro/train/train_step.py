@@ -1,0 +1,78 @@
+"""The jitted training step: loss -> grads -> (optional compression) -> AdamW.
+
+Microbatch gradient accumulation runs as a lax.scan, which lets XLA overlap
+each microbatch's backward compute with the previous reduce-scatter (the
+standard compute/comm overlap at scale); remat policy lives inside the model
+(per scan-unit jax.checkpoint).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.registry import Model
+from .optimizer import (AdamWConfig, AdamWState, apply_updates, compress_grads)
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    n_microbatches: int = 1,
+                    compression: Optional[str] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``batch['tokens']/['labels']`` are (B, S); with microbatching B splits into
+    ``n_microbatches`` leading chunks accumulated in fp32.
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def single(params, batch):
+        return grad_fn(params, batch)
+
+    def accumulated(params, batch):
+        b = batch["tokens"].shape[0]
+        assert b % n_microbatches == 0, (b, n_microbatches)
+        mb = b // n_microbatches
+
+        def split(x):
+            return x.reshape((n_microbatches, mb) + x.shape[1:])
+
+        mbatches = {k: split(v) for k, v in batch.items()}
+
+        def step(acc, mbatch):
+            loss, grads = grad_fn(params, mbatch)
+            acc_loss, acc_grads = acc
+            acc_grads = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc_grads, grads)
+            return (acc_loss + loss, acc_grads), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        init = (jnp.zeros((), jnp.float32), zero)
+        if model.cfg.unroll_stack:
+            # cost-analysis variants unroll this loop too (a while body is
+            # counted once by XLA's cost model; see launch/dryrun.py)
+            acc = init
+            for i in range(n_microbatches):
+                acc, _ = step(acc, jax.tree.map(lambda x: x[i], mbatches))
+            loss, grads = acc
+        else:
+            (loss, grads), _ = jax.lax.scan(step, init, mbatches)
+        inv = 1.0 / n_microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]):
+        if n_microbatches > 1:
+            loss, grads = accumulated(params, batch)
+        else:
+            loss, grads = single(params, batch)
+        grads = compress_grads(grads, compression)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {**metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step

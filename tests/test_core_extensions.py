@@ -1,0 +1,92 @@
+"""Tests for the paper's §5 extensions: per-level Apriori+GFP counting (§5.1)
+and incremental mining with guided recounts (§5.2)."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mine_frequent
+from repro.core.apriori_gfp import apriori_gfp
+from repro.core.incremental import IncrementalMiner
+
+ITEMS = list(range(10))
+transactions_st = st.lists(
+    st.lists(st.sampled_from(ITEMS), min_size=0, max_size=6),
+    min_size=1, max_size=30,
+)
+
+
+@settings(max_examples=50, deadline=None)
+@given(transactions_st, st.integers(min_value=1, max_value=5))
+def test_apriori_gfp_equals_fpgrowth(db, min_count):
+    got, stats = apriori_gfp(db, min_count)
+    want = mine_frequent(db, min_count)
+    assert got == want
+    assert stats.header_consults >= 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    transactions_st, transactions_st,
+    st.floats(min_value=0.05, max_value=0.7),
+)
+def test_incremental_equals_batch(db0, db1, theta):
+    miner = IncrementalMiner(theta)
+    miner.fit(db0)
+    got = miner.update(db1)
+    want = mine_frequent(db0 + db1, max(1, _ceil(theta * (len(db0) + len(db1)))))
+    assert got == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(transactions_st, transactions_st, transactions_st)
+def test_incremental_two_updates(db0, db1, db2):
+    theta = 0.25
+    miner = IncrementalMiner(theta)
+    miner.fit(db0)
+    miner.update(db1)
+    got = miner.update(db2)
+    n = len(db0) + len(db1) + len(db2)
+    want = mine_frequent(db0 + db1 + db2, _ceil(theta * n))
+    assert got == want
+
+
+def test_incremental_guided_work_is_smaller():
+    """The guided recount should touch far fewer tree nodes than re-mining."""
+    rng = random.Random(0)
+    db0 = [[i for i in range(30) if rng.random() < 0.2] for _ in range(800)]
+    db1 = [[i for i in range(30) if rng.random() < 0.2] for _ in range(80)]
+    miner = IncrementalMiner(0.05)
+    miner.fit(db0)
+    got = miner.update(db1)
+    want = mine_frequent(db0 + db1, _ceil(0.05 * 880))
+    assert got == want
+
+
+def _ceil(x):
+    import math
+    return max(1, math.ceil(x - 1e-9))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    transactions_st,
+    st.lists(st.integers(min_value=0, max_value=1), min_size=30, max_size=30),
+    st.floats(min_value=0.03, max_value=0.4),
+)
+def test_optimal_rule_set_invariants(db, ybits, min_sup):
+    """Li/Shen/Topor optimal set (paper §5.1 ref [26]): every kept rule's
+    proper sub-antecedents all have strictly lower confidence; every dropped
+    rule is dominated by a kept subset chain."""
+    from repro.core import minority_report
+    from repro.core.optimal_rules import is_optimal_set, optimal_rule_set
+
+    y = ybits[: len(db)]
+    if 1 not in y:
+        return
+    res = minority_report(db, y, min_support=min_sup, min_confidence=0.0)
+    opt = optimal_rule_set(res.rules)
+    assert is_optimal_set(opt, res.rules)
+    assert set(r.antecedent for r in opt) <= set(r.antecedent for r in res.rules)
+    # every single-item rule is trivially optimal (no proper subsets)
+    singles = [r for r in res.rules if len(r.antecedent) == 1]
+    assert set(r.antecedent for r in singles) <= set(r.antecedent for r in opt)

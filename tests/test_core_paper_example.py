@@ -1,0 +1,104 @@
+"""Golden tests: the paper's §4.2 worked example, verified number-for-number."""
+import math
+
+import pytest
+
+from repro.core import (
+    FPTree, ItemOrder, TISTree, brute_force_counts, fp_growth_into_tis,
+    full_fpgrowth_rules, gfp_growth, mine_frequent, minority_report,
+)
+
+# Table 1 of the paper.
+DB = [
+    (list("facdgimp"), 0),   # TID 100
+    (list("abcflmo"), 0),    # TID 200
+    (list("bfhjo"), 0),      # TID 300
+    (list("bcksp"), 0),      # TID 400
+    (list("afcelpmn"), 0),   # TID 500
+    (list("fm"), 1),         # TID 600
+    (list("c"), 1),          # TID 700
+    (list("b"), 1),          # TID 800
+]
+TX = [t for t, _ in DB]
+Y = [y for _, y in DB]
+
+
+def test_first_pass_item_selection():
+    res = minority_report(TX, Y, min_support=0.125, min_confidence=0.2)
+    assert sorted(res.items_kept) == ["b", "c", "f", "m"]
+
+
+def test_tis_counts_match_paper():
+    res = minority_report(TX, Y, min_support=0.125, min_confidence=0.2)
+    # C1 counts (paper Figure 3): f:1 c:1 b:1 m:1 and {m,f}:1
+    c1 = res.tis.as_dict("count")
+    assert c1 == {("f",): 1, ("c",): 1, ("b",): 1, ("m",): 1, ("f", "m"): 1}
+    # g-counts after GFP (paper Figure 4 / §4.2 walk-through):
+    g = res.tis.as_dict("g_count")
+    assert g == {("m",): 3, ("b",): 3, ("c",): 4, ("f",): 4, ("f", "m"): 3}
+
+
+def test_rules_and_confidences_match_paper():
+    res = minority_report(TX, Y, min_support=0.125, min_confidence=0.2)
+    conf = {r.antecedent: r.confidence for r in res.rules}
+    assert conf[("m",)] == pytest.approx(0.25)
+    assert conf[("b",)] == pytest.approx(0.25)
+    assert conf[("c",)] == pytest.approx(0.2)
+    assert conf[("f",)] == pytest.approx(0.2)
+    assert conf[("f", "m")] == pytest.approx(0.25)  # 1/(1+3)
+    # all five rules reported, nothing else
+    assert len(res.rules) == 5
+    # support values: count / |DB| = 1/8
+    for r in res.rules:
+        assert r.support == pytest.approx(0.125)
+
+
+def test_paper_reports_mf_confidence_erratum():
+    """Paper §4.2 lists Confidence(m,f)=1/(1+4)=0.2 but its own Figure 4 shows
+    g-count({m,f})=3 (the walk-through sets TIS-tree({m,f}).g-count = 3), which
+    gives 1/(1+3)=0.25.  Brute force agrees with 3: transactions containing
+    {m,f} in class 0 are TIDs 100, 200, 500.  We assert the exact value."""
+    oracle = brute_force_counts([t for t, y in DB if y == 0], [("m", "f")])
+    assert oracle[("f", "m")] == 3
+
+
+def test_gfp_counts_equal_bruteforce_on_example():
+    res = minority_report(TX, Y, min_support=0.125, min_confidence=0.2)
+    db0 = [t for t, y in DB if y == 0]
+    targets = list(res.tis.as_dict("g_count").keys())
+    oracle = brute_force_counts(db0, targets)
+    assert res.tis.as_dict("g_count") == oracle
+
+
+def test_full_fpgrowth_baseline_agrees():
+    mra = minority_report(TX, Y, min_support=0.125, min_confidence=0.2)
+    base = full_fpgrowth_rules(TX, Y, min_support=0.125, min_confidence=0.2)
+    mra_map = {r.antecedent: (r.count, r.g_count) for r in mra.rules}
+    base_map = {r.antecedent: (r.count, r.g_count) for r in base}
+    assert mra_map == base_map
+
+
+def test_fp_tree_structure_of_fp1():
+    """FP1 (Figure 1): three single-node branches f,c,b — plus m under f."""
+    res = minority_report(TX, Y, min_support=0.125, min_confidence=0.2)
+    # rebuild FP1 as MRA does
+    order = res.order
+    fp1 = FPTree(order)
+    for t, y in DB:
+        if y == 1:
+            fp1.insert(order.sort_transaction(t))
+    assert set(fp1.root.children) == {"f", "c", "b"}
+    f_node = fp1.root.children["f"]
+    assert f_node.count == 1 and set(f_node.children) == {"m"}
+
+
+def test_header_linked_list_sums():
+    order = ItemOrder(["f", "c", "b", "m"])
+    fp0 = FPTree(order)
+    for t, y in DB:
+        if y == 0:
+            fp0.insert(order.sort_transaction(t))
+    for item in "fcbm":
+        assert fp0.item_count(item) == fp0.item_count_via_links(item)
+    assert fp0.item_count("f") == 4 and fp0.item_count("c") == 4
+    assert fp0.item_count("b") == 3 and fp0.item_count("m") == 3

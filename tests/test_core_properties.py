@@ -1,0 +1,129 @@
+"""Property-based tests (hypothesis) for the paper-faithful core.
+
+Invariants:
+  * Theorem 1  — GFP-growth g-counts equal exact brute-force counts for every
+    itemset in the TIS-tree, for arbitrary DBs and arbitrary target lists.
+  * Theorems 2/3 — MRA emits all-and-only rules matching brute force, with
+    exact support/confidence.
+  * FP-growth == Apriori == brute force on the frequent-itemset lattice.
+  * Anti-monotonicity of counts.
+  * GFP data-reduction optimization (#4) does not change results.
+"""
+import math
+from typing import List
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FPTree, ItemOrder, TISTree, apriori, brute_force_counts, fp_growth,
+    full_fpgrowth_rules, gfp_growth, mine_frequent, minority_report,
+)
+
+ITEMS = list(range(8))
+
+transactions_st = st.lists(
+    st.lists(st.sampled_from(ITEMS), min_size=0, max_size=6),
+    min_size=1, max_size=24,
+)
+targets_st = st.lists(
+    st.lists(st.sampled_from(ITEMS), min_size=1, max_size=4),
+    min_size=1, max_size=12,
+)
+
+
+def _order_for(db) -> ItemOrder:
+    counts = {}
+    for t in db:
+        for a in set(t):
+            counts[a] = counts.get(a, 0) + 1
+    return ItemOrder.from_counts(counts)
+
+
+@settings(max_examples=120, deadline=None)
+@given(transactions_st, targets_st)
+def test_theorem1_gfp_counts_exact(db, targets):
+    order = _order_for(db)
+    # TIS-tree may only contain items present in the FP-tree's universe
+    targets = [[a for a in t if a in order] for t in targets]
+    targets = [t for t in targets if t]
+    if not targets:
+        return
+    tree = FPTree.build(db, order)
+    tis = TISTree(order)
+    for t in targets:
+        tis.insert(t, target=True)
+    gfp_growth(tis, tree)
+    got = tis.as_dict("g_count")
+    want = brute_force_counts(db, list(got.keys()))
+    assert got == want
+
+
+@settings(max_examples=60, deadline=None)
+@given(transactions_st, targets_st)
+def test_gfp_data_reduction_invariant(db, targets):
+    order = _order_for(db)
+    targets = [[a for a in t if a in order] for t in targets]
+    targets = [t for t in targets if t]
+    if not targets:
+        return
+    tree = FPTree.build(db, order)
+    results = []
+    for reduce_items in (True, False):
+        tis = TISTree(order)
+        for t in targets:
+            tis.insert(t, target=True)
+        gfp_growth(tis, tree, use_data_reduction=reduce_items)
+        results.append(tis.as_dict("g_count"))
+    assert results[0] == results[1]
+
+
+@settings(max_examples=60, deadline=None)
+@given(transactions_st, st.integers(min_value=1, max_value=5))
+def test_fpgrowth_equals_apriori(db, min_count):
+    assert mine_frequent(db, min_count) == apriori(db, min_count)
+
+
+@settings(max_examples=60, deadline=None)
+@given(transactions_st, st.integers(min_value=1, max_value=4))
+def test_fpgrowth_counts_exact_and_antimonotone(db, min_count):
+    freq = mine_frequent(db, min_count)
+    oracle = brute_force_counts(db, list(freq.keys()))
+    assert freq == oracle
+    for itemset, c in freq.items():
+        for drop in range(len(itemset)):
+            sub = itemset[:drop] + itemset[drop + 1:]
+            if sub:
+                assert freq[sub] >= c  # subsets frequent + anti-monotone
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    transactions_st,
+    st.lists(st.integers(min_value=0, max_value=1), min_size=24, max_size=24),
+    st.floats(min_value=0.02, max_value=0.6),
+    st.floats(min_value=0.0, max_value=0.9),
+)
+def test_mra_equals_bruteforce_rules(db, ybits, min_sup, min_conf):
+    y = ybits[: len(db)]
+    if 1 not in y:
+        return
+    res = minority_report(db, y, min_support=min_sup, min_confidence=min_conf)
+    # Oracle: enumerate all itemsets over kept items via full FP-growth baseline
+    base = full_fpgrowth_rules(db, y, min_support=min_sup, min_confidence=min_conf)
+    got = {r.antecedent: (r.count, r.g_count, round(r.confidence, 12)) for r in res.rules}
+    want = {r.antecedent: (r.count, r.g_count, round(r.confidence, 12)) for r in base}
+    assert got == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(transactions_st)
+def test_conditional_tree_represents_projection(db):
+    """conditional_tree(a) must represent exactly the prefix-projected DB."""
+    order = _order_for(db)
+    tree = FPTree.build(db, order)
+    for item in list(tree.header)[:3]:
+        ctree = tree.conditional_tree(item)
+        # count of any other item b in ctree == count of {item, b} in DB
+        for b in list(ctree.header):
+            want = brute_force_counts(db, [(item, b)])
+            assert ctree.item_count(b) == list(want.values())[0]

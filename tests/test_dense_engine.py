@@ -1,0 +1,114 @@
+"""Dense (TPU-native) engine vs paper-faithful host engine vs brute force."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ItemOrder, TISTree, brute_force_counts, mine_frequent,
+                        minority_report)
+from repro.mining import (DenseDB, ItemVocab, dedup_rows, decode_row,
+                          dense_gfp_counts, dense_mine_frequent, encode_bitmap,
+                          minority_report_dense, project_columns)
+
+ITEMS = list(range(12))
+transactions_st = st.lists(
+    st.lists(st.sampled_from(ITEMS), min_size=0, max_size=8),
+    min_size=1, max_size=40,
+)
+targets_st = st.lists(
+    st.lists(st.sampled_from(ITEMS), min_size=1, max_size=4),
+    min_size=1, max_size=10,
+)
+
+
+def test_encode_decode_roundtrip():
+    rng = np.random.default_rng(0)
+    db = [[i for i in range(40) if rng.random() < 0.2] for _ in range(50)]
+    vocab = ItemVocab.from_transactions(db)
+    bits = encode_bitmap(db, vocab)
+    for i, t in enumerate(db):
+        assert sorted(decode_row(bits[i], vocab), key=repr) == \
+            sorted(set(a for a in t if a in vocab), key=repr)
+
+
+def test_dedup_preserves_totals():
+    rng = np.random.default_rng(1)
+    # low-entropy data so dedup actually collapses (FP-compression analogue)
+    db = [[i for i in range(6) if rng.random() < 0.5] for _ in range(400)]
+    vocab = ItemVocab.from_transactions(db)
+    bits = encode_bitmap(db, vocab)
+    ub, uw = dedup_rows(bits)
+    assert ub.shape[0] <= 2 ** 6
+    assert ub.shape[0] < bits.shape[0]  # real collapse
+    assert uw.sum() == bits.shape[0]
+
+
+def test_projection_matches_subset_semantics():
+    rng = np.random.default_rng(2)
+    db = [[i for i in range(20) if rng.random() < 0.3] for _ in range(60)]
+    vocab = ItemVocab.from_transactions(db)
+    bits = encode_bitmap(db, vocab)
+    keep = [a for a in vocab.items][:7]
+    proj, sub = project_columns(bits, vocab, keep)
+    for i, t in enumerate(db):
+        want = sorted((a for a in set(t) if a in sub), key=repr)
+        assert sorted(decode_row(proj[i], sub), key=repr) == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(transactions_st, targets_st)
+def test_dense_gfp_counts_theorem1(db, targets):
+    """Theorem 1 on the dense engine: g-counts exact for arbitrary TIS."""
+    counts = {}
+    for t in db:
+        for a in set(t):
+            counts[a] = counts.get(a, 0) + 1
+    if not counts:
+        return
+    order = ItemOrder.from_counts(counts)
+    targets = [[a for a in t if a in order] for t in targets]
+    targets = [t for t in targets if t]
+    if not targets:
+        return
+    tis = TISTree(order)
+    for t in targets:
+        tis.insert(t, target=True)
+    ddb = DenseDB.encode(db)
+    got = dense_gfp_counts(tis, ddb)
+    want = brute_force_counts(db, list(got.keys()))
+    assert {k: int(v[0]) for k, v in got.items()} == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(transactions_st, st.integers(min_value=1, max_value=6))
+def test_dense_mine_frequent_equals_fpgrowth(db, min_count):
+    ddb = DenseDB.encode(db)
+    got = dense_mine_frequent(ddb, min_count)
+    assert got == mine_frequent(db, min_count)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    transactions_st,
+    st.lists(st.integers(min_value=0, max_value=1), min_size=40, max_size=40),
+    st.floats(min_value=0.05, max_value=0.5),
+    st.floats(min_value=0.0, max_value=0.8),
+)
+def test_dense_mra_equals_host_mra(db, ybits, min_sup, min_conf):
+    y = ybits[: len(db)]
+    if 1 not in y:
+        return
+    host = minority_report(db, y, min_support=min_sup, min_confidence=min_conf)
+    dense = minority_report_dense(db, y, min_support=min_sup, min_confidence=min_conf)
+    h = {r.antecedent: (r.count, r.g_count) for r in host.rules}
+    d = {r.antecedent: (r.count, r.g_count) for r in dense.rules}
+    assert h == d
+
+
+def test_dense_gfp_target_missing_items_counts_zero():
+    db = [[0, 1], [1, 2]]
+    order = ItemOrder([1, 0, 2, 99])
+    tis = TISTree(order)
+    tis.insert([99, 1], target=True)
+    ddb = DenseDB.encode(db)
+    got = dense_gfp_counts(tis, ddb)
+    assert int(got[(1, 99)][0]) == 0

@@ -1,0 +1,172 @@
+"""Per-kernel validation: shape/dtype sweeps + property tests, Pallas kernel
+(interpret mode on CPU) vs the pure-jnp ref.py oracle vs brute force."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import brute_force_counts
+from repro.kernels.itemset_count import (itemset_counts, itemset_counts_ref,
+                                         itemset_counts_ref_blocked)
+from repro.kernels.itemset_count.kernel import itemset_counts_pallas
+
+
+def _random_problem(rng, n, k, w, c, density=0.3):
+    tx = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    tx &= rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)  # sparsify
+    # targets: few set bits so containment actually happens
+    tgt = np.zeros((k, w), dtype=np.uint32)
+    for i in range(k):
+        for _ in range(rng.integers(1, 4)):
+            b = rng.integers(0, 32 * w)
+            tgt[i, b >> 5] |= np.uint32(1) << np.uint32(b & 31)
+    wts = rng.integers(0, 7, size=(n, c)).astype(np.int32)
+    return jnp.asarray(tx), jnp.asarray(tgt), jnp.asarray(wts)
+
+
+SHAPES = [
+    # (N, K, W, C, block_k, block_n)
+    (1, 1, 1, 1, 8, 128),
+    (128, 8, 1, 1, 8, 128),
+    (200, 5, 2, 2, 8, 128),          # padding on both axes
+    (1024, 256, 4, 2, 256, 1024),    # exact blocks
+    (1500, 300, 4, 3, 256, 512),     # multi-tile + ragged
+    (4096, 64, 8, 1, 64, 2048),
+    (333, 17, 16, 4, 16, 128),
+    (777, 130, 33, 2, 128, 256),     # odd word count
+]
+
+
+@pytest.mark.parametrize("n,k,w,c,bk,bn", SHAPES)
+def test_kernel_matches_ref_shapes(n, k, w, c, bk, bn):
+    rng = np.random.default_rng(n * 7 + k)
+    tx, tgt, wts = _random_problem(rng, n, k, w, c)
+    got = itemset_counts(tx, tgt, wts, block_k=bk, block_n=bn)
+    want = itemset_counts_ref(tx, tgt, wts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_blocked_ref_matches_ref():
+    rng = np.random.default_rng(0)
+    tx, tgt, wts = _random_problem(rng, 1000, 40, 3, 2)
+    a = itemset_counts_ref(tx, tgt, wts)
+    b = itemset_counts_ref_blocked(tx, tgt, wts, block_n=256)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_raw_layout_exact_blocks():
+    """Direct pallas_call path (pre-padded, transposed layouts)."""
+    rng = np.random.default_rng(3)
+    tx, tgt, wts = _random_problem(rng, 512, 64, 4, 2)
+    got = itemset_counts_pallas(tx.T, tgt, wts.T, block_k=32, block_n=128,
+                                interpret=True)
+    want = itemset_counts_ref(tx, tgt, wts).T
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_weight_vector_promotion():
+    rng = np.random.default_rng(4)
+    tx, tgt, _ = _random_problem(rng, 64, 4, 2, 1)
+    w1 = jnp.ones((64,), jnp.int32)
+    out = itemset_counts(tx, tgt, w1)
+    assert out.shape == (4, 1)
+
+
+def test_empty_inputs():
+    tx = jnp.zeros((0, 2), jnp.uint32)
+    tgt = jnp.zeros((3, 2), jnp.uint32)
+    w = jnp.zeros((0, 2), jnp.int32)
+    assert itemset_counts(tx, tgt, w).shape == (3, 2)
+    assert itemset_counts(jnp.zeros((5, 2), jnp.uint32),
+                          jnp.zeros((0, 2), jnp.uint32),
+                          jnp.ones((5, 1), jnp.int32)).shape == (0, 1)
+
+
+def test_huge_word_count_falls_back():
+    """W > MAX_KERNEL_WORDS uses the blocked jnp path, still exact."""
+    rng = np.random.default_rng(5)
+    tx, tgt, wts = _random_problem(rng, 100, 7, 80, 2)
+    got = itemset_counts(tx, tgt, wts)
+    want = itemset_counts_ref(tx, tgt, wts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=300),   # n
+    st.integers(min_value=1, max_value=40),    # k
+    st.integers(min_value=1, max_value=4),     # w
+    st.integers(min_value=1, max_value=4),     # c
+    st.integers(min_value=0, max_value=2 ** 31 - 1),
+)
+def test_kernel_property_random(n, k, w, c, seed):
+    rng = np.random.default_rng(seed)
+    tx, tgt, wts = _random_problem(rng, n, k, w, c)
+    got = itemset_counts(tx, tgt, wts, block_k=32, block_n=128)
+    want = itemset_counts_ref(tx, tgt, wts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_kernel_equals_bruteforce_semantics(seed):
+    """End-to-end semantic check against the set-containment oracle."""
+    from repro.mining import ItemVocab, class_weights, encode_bitmap, encode_targets
+
+    rng = np.random.default_rng(seed)
+    m, n = 20, 120
+    db = [[i for i in range(m) if rng.random() < 0.3] for _ in range(n)]
+    y = rng.integers(0, 2, n)
+    vocab = ItemVocab.from_transactions(db)
+    targets = [sorted(rng.choice(m, size=rng.integers(1, 4), replace=False).tolist())
+               for _ in range(10)]
+    targets = [[a for a in t if a in vocab] for t in targets]
+    targets = [t for t in targets if t]
+    if not targets:
+        return
+    got = np.asarray(itemset_counts(
+        jnp.asarray(encode_bitmap(db, vocab)),
+        jnp.asarray(encode_targets(targets, vocab)),
+        jnp.asarray(class_weights(y, 2)), block_k=16, block_n=128))
+    db0 = [t for t, c in zip(db, y) if c == 0]
+    db1 = [t for t, c in zip(db, y) if c == 1]
+    for i, t in enumerate(targets):
+        key = tuple(sorted(set(t), key=repr))
+        assert got[i, 0] == brute_force_counts(db0, [t])[key]
+        assert got[i, 1] == brute_force_counts(db1, [t])[key]
+
+
+def test_anti_monotone_counts():
+    """count(superset) <= count(subset) must hold for kernel outputs."""
+    rng = np.random.default_rng(9)
+    from repro.mining import ItemVocab, encode_bitmap, encode_targets
+    m, n = 16, 200
+    db = [[i for i in range(m) if rng.random() < 0.4] for _ in range(n)]
+    vocab = ItemVocab.from_transactions(db)
+    subs = [[a] for a in range(m) if a in vocab]
+    sups = [s + [(s[0] + 1) % m] for s in subs]
+    sups = [[a for a in t if a in vocab] for t in sups]
+    tx = jnp.asarray(encode_bitmap(db, vocab))
+    w = jnp.ones((n, 1), jnp.int32)
+    c_sub = np.asarray(itemset_counts(tx, jnp.asarray(encode_targets(subs, vocab)), w))
+    c_sup = np.asarray(itemset_counts(tx, jnp.asarray(encode_targets(sups, vocab)), w))
+    assert (c_sup <= c_sub).all()
+
+
+@pytest.mark.parametrize("accum", ["vpu_int32", "mxu_f32"])
+def test_accum_variants_exact(accum):
+    """Both reduction paths (VPU int32 / MXU f32 §Perf variant) are exact."""
+    rng = np.random.default_rng(11)
+    tx, tgt, wts = _random_problem(rng, 1111, 77, 5, 3)
+    got = itemset_counts(tx, tgt, wts, accum=accum, block_k=32, block_n=256)
+    want = itemset_counts_ref(tx, tgt, wts)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mxu_f32_bound_enforced():
+    tx = jnp.zeros((1, 1), jnp.uint32)
+    tgt = jnp.zeros((1, 1), jnp.uint32)
+    w = jnp.ones((1, 1), jnp.int32)
+    # fine under the bound
+    itemset_counts(tx, tgt, w, accum="mxu_f32")

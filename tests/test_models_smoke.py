@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests on REDUCED configs (CPU, 1 device):
+one forward/train step asserting output shapes + finiteness, and
+prefill->decode consistency against the full-sequence forward pass."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import get_model
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch_for(model, b, s, key):
+    cfg = model.cfg
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (b, s, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_loss(arch):
+    model = get_model(arch, reduced=True)
+    params = model.init(jax.random.key(0))
+    b, s = 2, 32
+    batch = _batch_for(model, b, s, jax.random.key(1))
+    logits = model.forward(params, batch["tokens"], frames=batch.get("frames"))
+    vpad = ((model.cfg.vocab_size + 255) // 256) * 256
+    assert logits.shape == (b, s, vpad)
+    assert bool(jnp.isfinite(logits).all())
+    loss = jax.jit(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    # near-uniform init => loss close to log(vocab)
+    assert abs(float(loss) - np.log(model.cfg.vocab_size)) < 1.5
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_grads_finite(arch):
+    model = get_model(arch, reduced=True)
+    params = model.init(jax.random.key(0))
+    batch = _batch_for(model, 2, 16, jax.random.key(2))
+    grads = jax.jit(jax.grad(model.loss))(params, batch)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    # something nonzero actually flowed
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """logits(decode @ pos s-1 after prefill of s-1) == logits(forward)[:, -1]."""
+    model = get_model(arch, reduced=True)
+    params = model.init(jax.random.key(0))
+    b, s = 2, 17
+    batch = _batch_for(model, b, s, jax.random.key(3))
+    toks = batch["tokens"]
+    full_logits = model.forward(params, toks, frames=batch.get("frames"))
+
+    max_len = 32
+    last_logits, cache = model.prefill(
+        params, toks[:, : s - 1], max_len, frames=batch.get("frames"))
+    np.testing.assert_allclose(
+        np.asarray(last_logits[:, 0]), np.asarray(full_logits[:, s - 2]),
+        rtol=2e-4, atol=2e-4)
+
+    dec_logits, cache = model.decode_step(
+        params, cache, toks[:, s - 1:s], jnp.asarray(s - 1, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]), np.asarray(full_logits[:, s - 1]),
+        rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mamba2-2.7b", "jamba-1.5-large-398b"])
+def test_multistep_decode(arch):
+    """Greedy 4-step decode equals teacher-forced forward argmax chain."""
+    model = get_model(arch, reduced=True)
+    params = model.init(jax.random.key(0))
+    b, s, extra = 1, 9, 4
+    toks = jax.random.randint(jax.random.key(4), (b, s + extra), 0,
+                              model.cfg.vocab_size)
+    full_logits = model.forward(params, toks)
+    _, cache = model.prefill(params, toks[:, :s], 32)
+    for i in range(extra):
+        pos = s + i  # next unseen token (prefill consumed 0..s-1)
+        logits, cache = model.decode_step(
+            params, cache, toks[:, pos:pos + 1], jnp.asarray(pos, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, pos]),
+            rtol=3e-4, atol=3e-4)
+
+
+def test_param_counts_match_analytic():
+    """Spec-derived parameter count ~ analytic 6ND count (within padding)."""
+    for arch in ALL_ARCHS:
+        model = get_model(arch, reduced=False)
+        spec_n = model.n_params()
+        analytic = model.cfg.n_params()
+        assert abs(spec_n - analytic) / analytic < 0.02, (
+            arch, spec_n, analytic)
+
+
+def test_moe_gather_matches_einsum():
+    """The two MoE dispatch implementations agree (same capacity drops)."""
+    import dataclasses
+    from repro.models.registry import Model
+    from repro.configs import get_config
+
+    cfg = get_config("arctic-480b").reduced()
+    m1 = Model(cfg)
+    params = m1.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(5), (2, 16), 0, cfg.vocab_size)
+    out1 = m1.forward(params, toks)
+    m2 = Model(dataclasses.replace(cfg, moe_impl="gather"))
+    out2 = m2.forward(params, toks)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,75 @@
+"""Merge fixup records into sweep JSONLs and inject the §Dry-run/§Roofline
+tables into EXPERIMENTS.md between the HTML-comment markers.
+
+  PYTHONPATH=src python tools/finalize_results.py \
+      --single results_single_pod.jsonl --fix-single /tmp/fixup.jsonl \
+      --multi results_multi_pod.jsonl  --fix-multi  /tmp/fixup_mp.jsonl
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.report import dryrun_table, load, roofline_table  # noqa: E402
+
+
+def merge(base_path: str, fix_path: str) -> list:
+    recs = {(r["arch"], r["shape"]): r for r in load(base_path)}
+    n = 0
+    if fix_path and os.path.exists(fix_path):
+        for r in load(fix_path):
+            recs[(r["arch"], r["shape"])] = r
+            n += 1
+    out = sorted(recs.values(), key=lambda r: (r["arch"], r["shape"]))
+    with open(base_path, "w") as f:
+        for r in out:
+            f.write(json.dumps(r) + "\n")
+    print(f"{base_path}: merged {n} fixups, {len(out)} records")
+    return out
+
+
+def inject(md_path: str, marker: str, content: str) -> None:
+    src = open(md_path).read()
+    tag = f"<!-- {marker} -->"
+    assert tag in src, marker
+    begin = src.index(tag)
+    # replace from the marker to the next section break (--- or ## at bol)
+    rest = src[begin + len(tag):]
+    src = src[:begin] + tag + "\n\n" + content + "\n" + _tail_after_block(rest)
+    open(md_path, "w").write(src)
+
+
+def _tail_after_block(rest: str) -> str:
+    # keep everything from the first line starting a new section
+    lines = rest.splitlines(keepends=True)
+    for i, l in enumerate(lines):
+        if l.startswith("---") or l.startswith("## ") or l.startswith("### Dry-run: mining"):
+            return "".join(lines[i:])
+    return ""
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", default="results_single_pod.jsonl")
+    ap.add_argument("--fix-single", default=None)
+    ap.add_argument("--multi", default="results_multi_pod.jsonl")
+    ap.add_argument("--fix-multi", default=None)
+    ap.add_argument("--md", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+
+    single = merge(args.single, args.fix_single)
+    multi = merge(args.multi, args.fix_multi)
+
+    dr = ("#### Single pod (16×16 = 256 chips)\n\n" + dryrun_table(single) +
+          "\n\n#### Multi-pod (2×16×16 = 512 chips) — compile proof "
+          "(`pod` axis shards; roofline single-pod only per spec)\n\n" +
+          dryrun_table(multi))
+    inject(args.md, "DRYRUN_TABLES", dr)
+    inject(args.md, "ROOFLINE_TABLE", roofline_table(single))
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()
