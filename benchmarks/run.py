@@ -7,6 +7,7 @@ fig5    — paper Fig 5 (simulation, p_Y in {0.01, 0.1}) runtime + ratios
 fig6    — paper Fig 6 (census-like categorical data) runtime + ratios
 kernel  — counting-kernel micro + GFP §3.1 optimization ablation
 scaling — distributed engine strong-scaling on an 8-device host mesh
+stream  — streaming out-of-core sweep vs single-pass dense counting
 """
 import argparse
 import sys
@@ -15,7 +16,7 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig5", "fig6", "kernel", "scaling"])
+                    choices=["fig5", "fig6", "kernel", "scaling", "stream"])
     args = ap.parse_args()
 
     from .common import emit
@@ -33,6 +34,9 @@ def main() -> None:
     if args.only in (None, "scaling"):
         from . import scaling
         suites["scaling"] = scaling.run
+    if args.only in (None, "stream"):
+        from . import streaming
+        suites["stream"] = streaming.run
 
     print("name,us_per_call,derived")
     ok = True

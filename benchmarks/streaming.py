@@ -1,0 +1,103 @@
+"""Streaming-engine benchmark: chunked out-of-core sweep vs single-pass dense.
+
+Measures the counting sweep at several chunk sizes (and the dense single pass
+as the resident baseline), verifies bit-identical counts against the blocked
+jnp oracle, and — run as a script — emits a ``BENCH_streaming.json`` perf
+record (the CI artifact tracking streaming overhead across PRs).
+
+  PYTHONPATH=src python -m benchmarks.streaming [--json BENCH_streaming.json]
+"""
+from __future__ import annotations
+
+import json
+from typing import List
+
+import numpy as np
+
+from repro.kernels.itemset_count import itemset_counts, itemset_counts_ref_blocked
+from repro.mining import streaming_counts
+
+from .common import Row, timeit
+
+
+def _problem(n: int, k: int, w: int, c: int, seed: int = 0):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    tx = (rng.integers(0, 2 ** 32, (n, w), dtype=np.uint32)
+          & rng.integers(0, 2 ** 32, (n, w), dtype=np.uint32))
+    tgt = np.zeros((k, w), np.uint32)
+    for i in range(k):
+        for b in rng.integers(0, 32 * w, 3):
+            tgt[i, b >> 5] |= np.uint32(1) << np.uint32(b & 31)
+    wts = rng.integers(0, 3, (n, c)).astype(np.int32)
+    return tx, tgt, wts, jnp
+
+
+N, K, W, C = 65536, 256, 4, 2
+CHUNKS = [8192, 16384, 32768]
+
+
+def run(record: List[dict] | None = None) -> List[Row]:
+    tx, tgt, wts, jnp = _problem(N, K, W, C)
+    want = np.asarray(itemset_counts_ref_blocked(
+        jnp.asarray(tx), jnp.asarray(tgt), jnp.asarray(wts)))
+
+    rows: List[Row] = []
+    tag = f"streaming[N={N},K={K},W={W}]"
+
+    tx_d, tgt_d, wts_d = jnp.asarray(tx), jnp.asarray(tgt), jnp.asarray(wts)
+    out = np.asarray(itemset_counts(tx_d, tgt_d, wts_d))
+    assert (out == want).all()
+    us_dense = timeit(
+        lambda: itemset_counts(tx_d, tgt_d, wts_d).block_until_ready())
+    rows.append((f"{tag}/dense_single_pass", us_dense, "resident_baseline"))
+    if record is not None:
+        record.append({"variant": "dense_single_pass", "chunk_rows": None,
+                       "us_per_sweep": us_dense, "n_chunks": 1, "match": True})
+
+    for chunk in CHUNKS:
+        out = np.asarray(streaming_counts(tx, tgt, wts, chunk_rows=chunk))
+        match = bool((out == want).all())
+        assert match, chunk
+        us = timeit(lambda: np.asarray(
+            streaming_counts(tx, tgt, wts, chunk_rows=chunk)))
+        n_chunks = -(-N // chunk)
+        rows.append((f"{tag}/chunk={chunk}", us,
+                     f"chunks={n_chunks};overhead_vs_dense="
+                     f"{us / max(us_dense, 1e-9):.2f}x"))
+        if record is not None:
+            record.append({"variant": "streaming", "chunk_rows": chunk,
+                           "us_per_sweep": us, "n_chunks": n_chunks,
+                           "match": match})
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_streaming.json")
+    args = ap.parse_args()
+
+    record: List[dict] = []
+    rows = run(record)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    payload = {
+        "bench": "streaming",
+        "backend": jax.default_backend(),
+        "problem": {"n": N, "k": K, "w": W, "c": C},
+        "rows": record,
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.json} ({len(record)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Out-of-core mining demo: N beyond device residency, with kill/resume.
+
+Builds a transaction DB, mines it with the streaming engine in small host
+chunks (simulating a DB far larger than device memory), and demonstrates the
+per-chunk checkpoint: the first mine is killed mid-level, the second resumes
+from the last completed chunk and still produces the exact rule set of the
+single-pass dense engine.
+
+  PYTHONPATH=src python examples/streaming_bigdata.py [rows] [chunk_rows]
+"""
+import os
+import sys
+import tempfile
+import time
+
+from repro.core import minority_report
+from repro.data import bernoulli_db
+from repro.mining import StreamingDB, minority_report_dense, streaming_mine_frequent
+from repro.mining.distributed import MiningCheckpoint
+
+
+def main() -> None:
+    rows = int(sys.argv[1]) if len(sys.argv) > 1 else 20000
+    chunk_rows = int(sys.argv[2]) if len(sys.argv) > 2 else 1024
+
+    tx, y = bernoulli_db(rows, 40, p_x=0.15, p_y=0.03, seed=7)
+    print(f"db: {rows} rows, chunked at {chunk_rows} rows/chunk")
+
+    # ---- streaming MRA == host-faithful MRA --------------------------------
+    t0 = time.time()
+    res = minority_report_dense(tx, y, min_support=0.002, min_confidence=0.02,
+                                streaming=True, chunk_rows=chunk_rows)
+    t_stream = time.time() - t0
+    host = minority_report(tx, y, min_support=0.002, min_confidence=0.02)
+    a = {r.antecedent: (r.count, r.g_count) for r in res.rules}
+    b = {r.antecedent: (r.count, r.g_count) for r in host.rules}
+    assert a == b, (len(a), len(b))
+    print(f"{res.engine} engine: {len(res.rules)} rules in {t_stream:.2f}s "
+          f"(== host-faithful MRA)")
+
+    # ---- kill/resume: durable per-chunk progress ---------------------------
+    sdb = StreamingDB.encode(tx, chunk_rows=chunk_rows)
+    fd, ckpt_path = tempfile.mkstemp(suffix=".mine.json")
+    os.close(fd)
+    ckpt = MiningCheckpoint(ckpt_path)
+    budget = sdb.n_chunks + sdb.n_chunks // 2  # die mid-way through level 2
+
+    class _Preempted(Exception):
+        pass
+
+    seen = []
+
+    def die_midway(level, chunk):
+        seen.append((level, chunk))
+        if len(seen) >= budget:
+            raise _Preempted()
+
+    try:
+        streaming_mine_frequent(sdb, min_count=rows * 0.01, checkpoint=ckpt,
+                                on_chunk=die_midway)
+        print("db too small to be preempted mid-level; try more rows")
+    except _Preempted:
+        level, chunk = seen[-1]
+        print(f"killed at level {level}, chunk {chunk + 1}/{sdb.n_chunks}")
+
+    resumed = []
+    got = streaming_mine_frequent(sdb, min_count=rows * 0.01, checkpoint=ckpt,
+                                  on_chunk=lambda l, c: resumed.append((l, c)))
+    want = streaming_mine_frequent(sdb, min_count=rows * 0.01)
+    assert got == want
+    print(f"resumed at level {resumed[0][0]}, chunk {resumed[0][1] + 1} — "
+          f"{len(resumed)} chunk-counts instead of {len(seen) + len(resumed)}"
+          f"+; {len(got)} frequent itemsets, identical to uninterrupted run")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Compatibility shims across the jax versions this repo runs under.
+
+The container pins one jax version; CI images and dev machines drift.  Two
+API seams matter to us:
+
+  * ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+    and renamed its replication-check kwarg ``check_rep`` -> ``check_vma``;
+  * ``jax.sharding.AbstractMesh`` changed its constructor from
+    ``((name, size), ...)`` pairs to ``(sizes, names)``.
+
+Callers use these wrappers and stay version-agnostic.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax >= 0.6: public top-level API
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg spelled per-version.
+
+    Accepts ``check_vma=`` (the modern spelling) and translates as needed.
+    """
+    if "check_vma" in kwargs and _CHECK_KW != "check_vma":
+        kwargs[_CHECK_KW] = kwargs.pop("check_vma")
+    return _shard_map(f, **kwargs)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Version-agnostic ``jax.sharding.AbstractMesh`` constructor."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:  # older jax: ((name, size), ...) pairs
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))

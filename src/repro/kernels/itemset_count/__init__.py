@@ -1,1 +1,2 @@
-from .ops import itemset_counts, itemset_counts_ref, itemset_counts_ref_blocked
+from .ops import (itemset_counts, itemset_counts_into, itemset_counts_ref,
+                  itemset_counts_ref_blocked)

@@ -16,7 +16,8 @@ import numpy as np
 from .kernel import itemset_counts_pallas
 from .ref import itemset_counts_ref, itemset_counts_ref_blocked
 
-__all__ = ["itemset_counts", "itemset_counts_ref", "itemset_counts_ref_blocked"]
+__all__ = ["itemset_counts", "itemset_counts_into", "itemset_counts_ref",
+           "itemset_counts_ref_blocked"]
 
 # Unrolling the word loop beyond this is counter-productive; fall back to the
 # blocked jnp reference (still jit-compiled) for enormous item universes.
@@ -80,3 +81,47 @@ def itemset_counts(
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Streaming accumulation step.  The out-of-core sweep (mining/stream.py) keeps
+# the small (K, C) count block device-resident and adds one chunk's counts per
+# call; donating the accumulator lets the compiler update it in place, so a
+# sweep allocates O(chunk) device memory regardless of total N.  Note the
+# mxu_f32 exactness bound (N < 2^24) then applies PER CHUNK — chunking makes
+# the MXU variant exact for unbounded N.
+# ---------------------------------------------------------------------------
+
+def _counts_into(acc, tx_bits, tgt_bits, weights, *, block_k, block_n,
+                 interpret, use_kernel, accum):
+    return acc + itemset_counts(
+        tx_bits, tgt_bits, weights, block_k=block_k, block_n=block_n,
+        interpret=interpret, use_kernel=use_kernel, accum=accum)
+
+
+@functools.lru_cache(maxsize=None)
+def _counts_into_jit(donate: bool):
+    kwargs = dict(static_argnames=("block_k", "block_n", "interpret",
+                                   "use_kernel", "accum"))
+    if donate:
+        kwargs["donate_argnums"] = (0,)
+    return jax.jit(_counts_into, **kwargs)
+
+
+def itemset_counts_into(
+    acc: jnp.ndarray,             # (K, C) int32 running counts (donated)
+    tx_bits: jnp.ndarray,         # (N_chunk, W) uint32
+    tgt_bits: jnp.ndarray,        # (K, W) uint32
+    weights: jnp.ndarray,         # (N_chunk, C) int32
+    *,
+    block_k: int = 256,
+    block_n: int = 1024,
+    interpret: Optional[bool] = None,
+    use_kernel: bool = True,
+    accum: str = "vpu_int32",
+) -> jnp.ndarray:                 # (K, C) int32 = acc + chunk counts
+    """``acc + itemset_counts(chunk)`` fused in one jit; acc stays on device."""
+    donate = jax.default_backend() != "cpu"  # CPU donation warns, no-op
+    return _counts_into_jit(donate)(
+        acc, tx_bits, tgt_bits, weights, block_k=block_k, block_n=block_n,
+        interpret=interpret, use_kernel=use_kernel, accum=accum)

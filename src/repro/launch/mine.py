@@ -22,7 +22,15 @@ def main() -> None:
     ap.add_argument("--min-conf", type=float, default=0.05)
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="MiningCheckpoint path: per-chunk durable progress "
+                         "(streaming engine), resume mid-level after a kill")
+    ap.add_argument("--streaming", action="store_true",
+                    help="force the out-of-core chunked engine (default: "
+                         "auto-select by encoded DB size)")
+    ap.add_argument("--chunk-rows", type=int, default=None,
+                    help="rows per streamed chunk (default: staging-budget "
+                         "heuristic, see mining/plan.py)")
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -31,17 +39,22 @@ def main() -> None:
 
     from ..data import bernoulli_db
     from ..mining import minority_report_dense
+    from ..mining.distributed import MiningCheckpoint
     from .mesh import make_host_mesh
 
     tx, y = bernoulli_db(args.rows, args.items, args.p_x, args.p_y, args.seed)
     print(f"db: {args.rows} rows, {args.items} items, "
           f"{int(y.sum())} rare-class rows")
 
+    ckpt = MiningCheckpoint(args.ckpt) if args.ckpt else None
     t0 = time.time()
     res = minority_report_dense(
-        tx, y, min_support=args.min_support, min_confidence=args.min_conf)
+        tx, y, min_support=args.min_support, min_confidence=args.min_conf,
+        streaming=True if args.streaming else None,
+        chunk_rows=args.chunk_rows, checkpoint=ckpt)
     t_dense = time.time() - t0
-    print(f"dense engine: {len(res.rules)} rules, {res.kernel_launches} kernel "
+    print(f"{res.engine} engine: {len(res.rules)} rules, "
+          f"{res.kernel_launches} kernel "
           f"launches, {t_dense:.2f}s; items kept: {len(res.items_kept)}")
     for r in res.rules[:10]:
         print("  ", r)

@@ -1,8 +1,10 @@
 # TPU-native multitude-targeted mining engine (the GFP-growth hardware
 # adaptation): bitmap encoding, TIS level scheduling, dense counting engine,
-# and the shard_map-distributed runtime.
+# the streaming out-of-core engine, and the shard_map-distributed runtime.
 from .encode import (ItemVocab, class_weights, dedup_rows, decode_row,
                      encode_bitmap, encode_targets, project_columns)
 from .dense import (DenseDB, DenseMRAResult, dense_gfp_counts,
                     dense_mine_frequent, minority_report_dense)
-from .plan import TISSchedule, build_schedule, live_items
+from .plan import (TISSchedule, build_schedule, choose_chunk_rows, live_items,
+                   stream_chunks)
+from .stream import (StreamingDB, streaming_counts, streaming_mine_frequent)

@@ -30,8 +30,45 @@ from ..kernels.itemset_count import itemset_counts
 from .encode import (ItemVocab, class_weights, dedup_rows, encode_bitmap,
                      encode_targets, project_columns)
 from .plan import TISSchedule, build_schedule, live_items
+from .stream import (DEFAULT_STREAM_THRESHOLD_BYTES, StreamingDB,
+                     streaming_counts, streaming_mine_frequent)
 
 Item = Hashable
+
+
+def _resolve_streaming(db, streaming: Optional[bool],
+                       chunk_rows: Optional[int] = None) -> bool:
+    """Engine selection.  A StreamingDB always streams; an explicit flag or
+    chunk_rows opts in; otherwise stream iff the DB is host-resident (numpy
+    bits) AND over the size threshold.  A device-resident DenseDB never
+    auto-streams: its allocation already succeeded, and streaming it would
+    only add a D2H copy + re-upload (size-based selection belongs BEFORE
+    encoding — see minority_report_dense)."""
+    if isinstance(db, StreamingDB):
+        return True
+    if streaming is not None:
+        return streaming
+    if chunk_rows is not None:
+        return True
+    if isinstance(db.bits, np.ndarray):
+        return (db.bits.size + db.weights.size) * 4 > \
+            DEFAULT_STREAM_THRESHOLD_BYTES
+    return False
+
+
+def _count_block(db, masks: np.ndarray, *, use_kernel: bool, streaming: bool,
+                 chunk_rows: Optional[int]) -> np.ndarray:
+    """(K, C) counts for one target batch on either engine (bit-identical)."""
+    if streaming:
+        if isinstance(db, StreamingDB):
+            return np.asarray(db.counts(masks, use_kernel=use_kernel,
+                                        **({"chunk_rows": chunk_rows}
+                                           if chunk_rows else {})))
+        return np.asarray(streaming_counts(
+            np.asarray(db.bits), masks, np.asarray(db.weights),
+            chunk_rows=chunk_rows, use_kernel=use_kernel))
+    return np.asarray(itemset_counts(
+        db.bits, jnp.asarray(masks), db.weights, use_kernel=use_kernel))
 
 
 @dataclass
@@ -75,16 +112,20 @@ class DenseDB:
 
 def dense_gfp_counts(
     tis: TISTree,
-    db: DenseDB,
+    db,                       # DenseDB | StreamingDB
     *,
     use_kernel: bool = True,
     project: bool = True,
+    streaming: Optional[bool] = None,
+    chunk_rows: Optional[int] = None,
 ) -> Dict[Tuple[Item, ...], np.ndarray]:
     """GFP-growth contract on the dense engine.
 
     Returns {sorted-itemset-tuple -> (C,) int32 per-class counts} for every
     *target* node of the TIS-tree (items missing from the DB vocab yield 0,
     matching the paper's note that such targets never appear in the FP-tree).
+    ``streaming`` selects the out-of-core chunked sweep (None = auto by DB
+    size; always on for a ``StreamingDB``) — counts are bit-identical.
     """
     targets: List[Tuple[Item, ...]] = []
     keys: List[Tuple[Item, ...]] = []
@@ -112,22 +153,26 @@ def dense_gfp_counts(
         work_db = db.project(sorted(union, key=repr))
 
     masks = encode_targets(targets, work_db.vocab)
-    counts = np.asarray(itemset_counts(
-        work_db.bits, jnp.asarray(masks), work_db.weights,
-        use_kernel=use_kernel,
-    ))
+    counts = _count_block(work_db, masks, use_kernel=use_kernel,
+                          streaming=_resolve_streaming(db, streaming,
+                                                       chunk_rows),
+                          chunk_rows=chunk_rows)
     for key, row in zip(keys, counts):
         out[key] = row
     return out
 
 
 def dense_mine_frequent(
-    db: DenseDB,
+    db,                       # DenseDB | StreamingDB
     min_count: float,
     *,
     class_column: Optional[int] = None,
     max_len: int = 0,
     use_kernel: bool = True,
+    streaming: Optional[bool] = None,
+    chunk_rows: Optional[int] = None,
+    checkpoint=None,          # Optional[MiningCheckpoint] (streaming path)
+    on_chunk=None,            # streaming progress hook: (level, chunk_idx)
 ) -> Dict[Tuple[Item, ...], int]:
     """Level-synchronous exact frequent-itemset mining on the device.
 
@@ -135,8 +180,27 @@ def dense_mine_frequent(
     join + anti-monotone prune; each level is counted in ONE kernel launch —
     the §5.1 'single guided invocation per level' realized densely.
     ``class_column`` restricts support to one weight column (rare class).
+
+    The streaming path (``streaming=True``, a ``StreamingDB`` input, or an
+    auto-selected large DB) sweeps each level's counts in N-chunks and, with
+    a ``checkpoint``, persists per-chunk progress so a killed mine resumes
+    mid-level (see ``streaming_mine_frequent``).
     """
     from ..core.apriori import apriori_gen
+
+    if checkpoint is not None and streaming is False:
+        raise ValueError("per-chunk checkpointing requires the streaming "
+                         "engine; drop streaming=False or the checkpoint")
+    if _resolve_streaming(db, streaming, chunk_rows) or checkpoint is not None:
+        from dataclasses import replace
+
+        sdb = (db if isinstance(db, StreamingDB)
+               else StreamingDB.from_dense(db, chunk_rows))
+        if chunk_rows and sdb.chunk_rows != chunk_rows:
+            sdb = replace(sdb, chunk_rows=chunk_rows)
+        return streaming_mine_frequent(
+            sdb, min_count, class_column=class_column, max_len=max_len,
+            use_kernel=use_kernel, checkpoint=checkpoint, on_chunk=on_chunk)
 
     col = slice(None) if class_column is None else class_column
     w = np.asarray(db.weights)
@@ -181,6 +245,7 @@ class DenseMRAResult:
     n_db: int
     n_rare: int
     kernel_launches: int
+    engine: str = "dense"
 
 
 def minority_report_dense(
@@ -191,8 +256,16 @@ def minority_report_dense(
     min_support: float,
     min_confidence: float,
     use_kernel: bool = True,
+    streaming: Optional[bool] = None,
+    chunk_rows: Optional[int] = None,
+    checkpoint=None,          # Optional[MiningCheckpoint] (streaming path)
 ) -> DenseMRAResult:
-    """MRA on the dense engine (see module docstring)."""
+    """MRA on the dense engine (see module docstring).
+
+    ``streaming=True`` (or auto, by encoded size) runs both the antecedent
+    mine and the fused two-class pass as chunked out-of-core sweeps — the
+    rule list is identical to the single-pass engine.
+    """
     db_list = [list(t) for t in transactions]
     n_db = len(db_list)
     c_star = min_support * n_db
@@ -216,22 +289,47 @@ def minority_report_dense(
     vocab = ItemVocab(tuple(items_kept))
 
     # ---- pass 2: one encoded DB, two weight columns (C0, C1) ---------------
-    db = DenseDB.encode(db_list, classes=y01, n_classes=2, vocab=vocab)
+    # engine selection mirrors _resolve_streaming: explicit flag wins, then
+    # chunk_rows/checkpoint opt in, then pre-encode size estimate
+    if checkpoint is not None and streaming is False:
+        raise ValueError("per-chunk checkpointing requires the streaming "
+                         "engine; drop streaming=False or the checkpoint")
+    if streaming is not None:
+        stream = streaming
+    elif chunk_rows is not None or checkpoint is not None:
+        stream = True
+    else:
+        est = n_db * 4 * (max(1, (len(items_kept) + 31) // 32) + 2)
+        stream = est > DEFAULT_STREAM_THRESHOLD_BYTES
+    if stream:
+        db = StreamingDB.encode(db_list, classes=y01, n_classes=2, vocab=vocab,
+                                chunk_rows=chunk_rows)
+    else:
+        db = DenseDB.encode(db_list, classes=y01, n_classes=2, vocab=vocab)
 
     # ---- antecedent discovery on the rare class (small) ---------------------
     launches = 0
-    freq1 = dense_mine_frequent(db, min_count, class_column=1, use_kernel=use_kernel)
-    launches += max(0, max((len(k) for k in freq1), default=1) - 1)
+    chunk_counter = [0]
+    freq1 = dense_mine_frequent(
+        db, min_count, class_column=1, use_kernel=use_kernel, streaming=stream,
+        chunk_rows=chunk_rows, checkpoint=checkpoint,
+        on_chunk=(lambda lvl, j: chunk_counter.__setitem__(
+            0, chunk_counter[0] + 1)) if stream else None)
+    if stream:
+        launches += chunk_counter[0]  # exact: one launch per swept chunk
+    else:
+        launches += max(0, max((len(k) for k in freq1), default=1) - 1)
+    engine = "streaming" if stream else "dense"
 
     if not freq1:
-        return DenseMRAResult([], items_kept, n_db, n_rare, launches)
+        return DenseMRAResult([], items_kept, n_db, n_rare, launches, engine)
 
     # ---- fused counting of (C0, C1) for all antecedents ----------------------
     itemsets = sorted(freq1.keys())
     masks = encode_targets(itemsets, vocab)
-    counts = np.asarray(itemset_counts(
-        db.bits, jnp.asarray(masks), db.weights, use_kernel=use_kernel))
-    launches += 1
+    counts = _count_block(db, masks, use_kernel=use_kernel, streaming=stream,
+                          chunk_rows=chunk_rows)
+    launches += db.n_chunks if stream else 1
 
     rules: List[Rule] = []
     for itemset, row in zip(itemsets, counts):
@@ -241,4 +339,4 @@ def minority_report_dense(
         if conf >= min_confidence:
             rules.append(Rule(itemset, target_class, c1_ / n_db, conf, c1_, c0_))
     rules.sort(key=lambda r: (-r.confidence, -r.support, r.antecedent))
-    return DenseMRAResult(rules, items_kept, n_db, n_rare, launches)
+    return DenseMRAResult(rules, items_kept, n_db, n_rare, launches, engine)

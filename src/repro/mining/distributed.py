@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..kernels.itemset_count import itemset_counts
 from .encode import ItemVocab, encode_targets
 
@@ -40,6 +41,38 @@ Item = Hashable
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+@functools.lru_cache(maxsize=None)
+def _count_shard_fn(mesh: Mesh, data_axes: Tuple[str, ...],
+                    model_axis: Optional[str], use_kernel: bool):
+    """Build (and cache) the jitted shard_map counting launch.
+
+    Cached on (mesh, axes, use_kernel) so repeated launches — per mining
+    level, and per chunk of a streaming sweep — reuse one executable per
+    input shape instead of re-tracing a fresh closure every call.
+    """
+    tx_spec = P(data_axes, None)
+    tgt_spec = P(model_axis, None)
+    w_spec = P(data_axes, None)
+    out_spec = P(model_axis, None)
+
+    @functools.partial(
+        jax.jit,
+        in_shardings=(NamedSharding(mesh, tx_spec), NamedSharding(mesh, tgt_spec),
+                      NamedSharding(mesh, w_spec)),
+        out_shardings=NamedSharding(mesh, out_spec),
+    )
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(tx_spec, tgt_spec, w_spec), out_specs=out_spec,
+        check_vma=False,  # pallas_call out_shape carries no vma annotation
+    )
+    def count_shard(tx, tgt, wts):
+        local = itemset_counts(tx, tgt, wts, use_kernel=use_kernel)
+        return jax.lax.psum(local, data_axes)
+
+    return count_shard
 
 
 def distributed_counts(
@@ -51,43 +84,58 @@ def distributed_counts(
     data_axes: Tuple[str, ...] = ("data",),
     model_axis: Optional[str] = "model",
     use_kernel: bool = True,
+    chunk_rows: Optional[int] = None,
 ) -> np.ndarray:              # (K, C) int32
-    """Exact counts on a mesh: N over data axes, K over the model axis."""
+    """Exact counts on a mesh: N over data axes, K over the model axis.
+
+    ``chunk_rows`` composes sharding-over-devices with streaming-within-
+    device: the N axis is swept in host-side chunks (each chunk itself
+    sharded over the data axes), so per-device residency is
+    O(chunk_rows / data_size) regardless of total N.  Counts are int32 sums —
+    the chunked sweep is bit-identical to the single pass.
+    """
     k, w = tgt_bits.shape
     n, c = weights.shape
+    # counts are bounded by the per-class weight-column sums; guard BEFORE any
+    # device work — the kernel and psum run in int32 and would wrap silently
+    if n and np.any(np.asarray(weights).sum(axis=0, dtype=np.int64)
+                    > np.iinfo(np.int32).max):
+        raise OverflowError("per-class weight totals exceed int32; counts "
+                            "could wrap — split the DB")
     dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
     msize = mesh.shape[model_axis] if model_axis else 1
+    k_pad = _round_up(max(k, 1), msize)
+    tgt_p = np.zeros((k_pad, w), np.uint32)
+    tgt_p[:k] = tgt_bits
+    count_shard = _count_shard_fn(mesh, tuple(data_axes), model_axis,
+                                  use_kernel)
+
+    if chunk_rows is not None and 0 < chunk_rows < n:
+        from .plan import stream_chunks
+        # fixed chunk shape (zero-pad the ragged tail) and a single device
+        # copy of the target block: one executable, one target upload
+        n_pad = _round_up(chunk_rows, dsize)
+        tgt_d = jnp.asarray(tgt_p)
+        txc = np.zeros((n_pad, tx_bits.shape[1]), np.uint32)
+        wc = np.zeros((n_pad, c), np.int32)
+        total = np.zeros((k, c), np.int64)
+        for s, e in stream_chunks(n, chunk_rows):
+            txc[: e - s] = tx_bits[s:e]
+            txc[e - s:] = 0
+            wc[: e - s] = weights[s:e]
+            wc[e - s:] = 0
+            # host int64 accumulation of the small (K, C) block (per-chunk
+            # sync; the block is tiny).  The upfront weight-sum guard bounds
+            # every count under int32, so the final cast cannot wrap.
+            total += np.asarray(count_shard(jnp.asarray(txc), tgt_d,
+                                            jnp.asarray(wc)))[:k]
+        return total.astype(np.int32)
 
     n_pad = _round_up(max(n, 1), dsize)
-    k_pad = _round_up(max(k, 1), msize)
     tx_p = np.zeros((n_pad, tx_bits.shape[1]), np.uint32)
     tx_p[:n] = tx_bits
     w_p = np.zeros((n_pad, c), np.int32)
     w_p[:n] = weights
-    tgt_p = np.zeros((k_pad, w), np.uint32)
-    tgt_p[:k] = tgt_bits
-
-    tx_spec = P(data_axes, None)
-    tgt_spec = P(model_axis, None)
-    w_spec = P(data_axes, None)
-    out_spec = P(model_axis, None)
-
-    @functools.partial(
-        jax.jit,
-        static_argnames=(),
-        in_shardings=(NamedSharding(mesh, tx_spec), NamedSharding(mesh, tgt_spec),
-                      NamedSharding(mesh, w_spec)),
-        out_shardings=NamedSharding(mesh, out_spec),
-    )
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(tx_spec, tgt_spec, w_spec), out_specs=out_spec,
-        check_vma=False,  # pallas_call out_shape carries no vma annotation
-    )
-    def count_shard(tx, tgt, wts):
-        local = itemset_counts(tx, tgt, wts, use_kernel=use_kernel)
-        return jax.lax.psum(local, data_axes)
-
     out = np.asarray(count_shard(jnp.asarray(tx_p), jnp.asarray(tgt_p),
                                  jnp.asarray(w_p)))
     return out[:k]
@@ -95,48 +143,74 @@ def distributed_counts(
 
 @dataclass
 class MiningCheckpoint:
-    """Restartable state of a level-synchronous distributed mine."""
+    """Restartable state of a level-synchronous mine.
+
+    ``level``/``frequent`` record the last COMPLETED level; the optional
+    ``partial`` dict records an in-flight level of a streaming sweep
+    ({level, itemsets, next_chunk, acc}) so a restart resumes mid-level from
+    the last completed chunk (see ``mining/stream.py``).
+    """
     path: str
 
     def save(self, level: int, frequent: Dict[Tuple[Item, ...], int],
-             meta: Optional[dict] = None) -> None:
+             meta: Optional[dict] = None,
+             partial: Optional[dict] = None) -> None:
         tmp = self.path + ".tmp"
         payload = {
             "level": level,
             "frequent": [[list(k), int(v)] for k, v in frequent.items()],
             "meta": meta or {},
+            "partial": partial,
         }
         with open(tmp, "w") as f:
             json.dump(payload, f)
         os.replace(tmp, self.path)  # atomic
 
     def load(self) -> Optional[Tuple[int, Dict[Tuple[Item, ...], int], dict]]:
+        state = self.load_state()
+        if state is None:
+            return None
+        return state["level"], state["frequent"], state["meta"]
+
+    def load_state(self) -> Optional[dict]:
+        """Full state incl. the mid-level ``partial`` record (or None)."""
         if not os.path.exists(self.path):
             return None
         with open(self.path) as f:
             payload = json.load(f)
         freq = {tuple(k): v for k, v in payload["frequent"]}
-        return payload["level"], freq, payload.get("meta", {})
+        return {
+            "level": payload["level"],
+            "frequent": freq,
+            "meta": payload.get("meta", {}),
+            "partial": payload.get("partial"),
+        }
 
 
 class DistributedMiner:
     """Level-synchronous exact frequent-itemset mining over a mesh, with
-    optional per-level checkpointing (fault tolerance) and elastic resume."""
+    optional per-level checkpointing (fault tolerance) and elastic resume.
+
+    ``chunk_rows`` enables the streaming composition: every counting launch
+    sweeps the N axis in host chunks, each chunk sharded over the data axes
+    (sharding-over-devices x streaming-within-device)."""
 
     def __init__(self, mesh: Mesh, *, data_axes: Tuple[str, ...] = ("data",),
                  model_axis: Optional[str] = "model", use_kernel: bool = True,
-                 checkpoint: Optional[MiningCheckpoint] = None):
+                 checkpoint: Optional[MiningCheckpoint] = None,
+                 chunk_rows: Optional[int] = None):
         self.mesh = mesh
         self.data_axes = data_axes
         self.model_axis = model_axis
         self.use_kernel = use_kernel
         self.checkpoint = checkpoint
+        self.chunk_rows = chunk_rows
 
     def counts(self, tx_bits, tgt_bits, weights) -> np.ndarray:
         return distributed_counts(
             tx_bits, tgt_bits, weights, self.mesh,
             data_axes=self.data_axes, model_axis=self.model_axis,
-            use_kernel=self.use_kernel)
+            use_kernel=self.use_kernel, chunk_rows=self.chunk_rows)
 
     def gfp_counts(
         self,

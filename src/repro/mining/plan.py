@@ -67,6 +67,38 @@ def build_schedule(tis: TISTree, vocab: ItemVocab) -> TISSchedule:
     return TISSchedule(vocab=vocab, levels=levels, n_nodes=n_nodes)
 
 
+# --------------------------------------------------------------------------
+# Streaming chunk planning (the out-of-core N axis).
+#
+# The counting kernel is oblivious to N-chunking: counts are int32 sums, so a
+# sweep over row-chunks accumulated on device is bit-identical to one pass.
+# The planner only decides WHERE to cut: chunk_rows from a host->device
+# staging budget (two in-flight buffers of bits+weights), aligned to the
+# kernel's N-block so chunk boundaries never add padding work.
+# --------------------------------------------------------------------------
+
+DEFAULT_STREAM_BUDGET_BYTES = 64 << 20   # per staging buffer (x2 in flight)
+
+
+def choose_chunk_rows(n_words: int, n_classes: int, *,
+                      budget_bytes: int = DEFAULT_STREAM_BUDGET_BYTES,
+                      align: int = 1024) -> int:
+    """Rows per streamed chunk so one buffer (bits + weights) fits the budget."""
+    row_bytes = 4 * (max(1, n_words) + max(1, n_classes))
+    rows = budget_bytes // row_bytes
+    return max(align, (rows // align) * align)
+
+
+def stream_chunks(n_rows: int, chunk_rows: int) -> List[Tuple[int, int]]:
+    """(start, stop) spans covering [0, n_rows); the last may be ragged."""
+    if n_rows <= 0:
+        return []
+    if chunk_rows <= 0:
+        raise ValueError(f"chunk_rows must be positive, got {chunk_rows}")
+    return [(s, min(s + chunk_rows, n_rows))
+            for s in range(0, n_rows, chunk_rows)]
+
+
 def live_items(level: LevelPlan, vocab: ItemVocab) -> List[Item]:
     """Union of items appearing in a level's masks (column-projection driver)."""
     union = np.zeros(level.masks.shape[1], dtype=np.uint32)

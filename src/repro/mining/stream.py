@@ -1,0 +1,319 @@
+"""Streaming out-of-core counting engine — N unbounded by device memory.
+
+The dense engine (``dense.py``) requires the whole encoded bitmap resident in
+one device allocation.  This module removes that limit the way "Mining
+Frequent Itemsets from Secondary Memory" (Grahne & Zhu, 2004) does for
+host-memory FP-trees, adapted to the TPU layout:
+
+  * ``StreamingDB`` keeps the (U, W) bitmap + (U, C) class weights HOST-side
+    and serves them in N-chunks;
+  * ``streaming_counts`` sweeps the chunks through the SAME Pallas kernel,
+    accumulating the small (K, C) count block on device
+    (``itemset_counts_into``, donated accumulator).  Counts are int32 sums,
+    so the sweep is bit-identical to a single dense pass for every chunking;
+  * ``streaming_mine_frequent`` is the level-synchronous miner on top, with
+    per-chunk checkpointing: a ``MiningCheckpoint`` records (completed levels,
+    current level's itemsets, next chunk, partial accumulator), so a killed
+    mine resumes MID-LEVEL from the last completed chunk.
+
+Overlap: jax dispatch is async — the ``jax.device_put`` of chunk i+1 is
+enqueued before the host blocks on chunk i's compute, double-buffering the
+H2D copy against the kernel (the dispatch-level analogue of the in-kernel
+DMA pipeline the grid already runs HBM->VMEM).  Ragged last chunks are
+zero-padded to the fixed chunk shape (zero-weight rows count nothing), so the
+whole sweep reuses one compiled executable.
+
+Exactness bonus: the ``accum='mxu_f32'`` kernel variant requires N < 2^24 per
+launch; chunking re-establishes that bound per chunk, making the MXU path
+exact for unbounded total N (total per-class counts must still fit the int32
+accumulator — guarded at sweep start).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.itemset_count import itemset_counts_into
+from .encode import (ItemVocab, class_weights, dedup_rows, encode_bitmap,
+                     encode_targets, project_columns)
+from .plan import choose_chunk_rows, stream_chunks
+
+Item = Hashable
+
+# Auto-select streaming when the encoded DB exceeds this device footprint.
+DEFAULT_STREAM_THRESHOLD_BYTES = 512 << 20
+
+
+def _pad_rows(arr: np.ndarray, rows: int) -> np.ndarray:
+    if arr.shape[0] == rows:
+        return arr
+    pad = np.zeros((rows - arr.shape[0],) + arr.shape[1:], arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+def streaming_counts(
+    tx_bits,                      # (N, W) uint32 (host array or device)
+    tgt_bits,                     # (K, W) uint32
+    weights,                      # (N, C) int32 (or (N,) -> C=1)
+    *,
+    chunk_rows: Optional[int] = None,
+    use_kernel: bool = True,
+    accum: str = "vpu_int32",
+    interpret: Optional[bool] = None,
+    block_k: int = 256,
+    block_n: int = 1024,
+    init: Optional[np.ndarray] = None,     # (K, C) resume accumulator
+    start_chunk: int = 0,
+    on_chunk: Optional[Callable[[int, jnp.ndarray], None]] = None,
+) -> jnp.ndarray:                 # (K, C) int32
+    """Chunked sweep of the counting kernel; bit-identical to one dense pass.
+
+    ``init``/``start_chunk`` resume a partially completed sweep; ``on_chunk``
+    is called after each chunk with (chunk_idx, device accumulator) — the
+    checkpoint hook (pulling the accumulator to host forces a sync, so only
+    pass it when you need durability).  The accumulator is DONATED to the
+    next chunk's launch: materialize it inside the callback (np.asarray) —
+    holding the array object past the callback reads a deleted buffer on
+    accelerator backends.
+    """
+    tx = np.asarray(tx_bits)
+    w = np.asarray(weights)
+    if w.ndim == 1:
+        w = w[:, None]
+    tgt = np.asarray(tgt_bits)
+    n = tx.shape[0]
+    k, c = tgt.shape[0], w.shape[1]
+    if k == 0:
+        return jnp.zeros((0, c), jnp.int32)
+    # int32 accumulator guard: the largest possible count is the per-class
+    # weight-column sum; "unbounded N" holds only while that fits int32
+    if n and np.any(w.sum(axis=0, dtype=np.int64) > np.iinfo(np.int32).max):
+        raise OverflowError(
+            "per-class weight totals exceed int32; streamed counts could "
+            "wrap — split the DB or widen the accumulator")
+    if chunk_rows is None:
+        chunk_rows = choose_chunk_rows(tx.shape[1], c)
+    chunks = stream_chunks(n, chunk_rows)
+    acc = (jnp.zeros((k, c), jnp.int32) if init is None
+           else jnp.asarray(np.asarray(init), jnp.int32))
+    if n == 0 or start_chunk >= len(chunks):
+        return acc
+    tgt_d = jax.device_put(jnp.asarray(tgt))
+    # fixed chunk shape (ragged tail zero-padded): one compiled executable
+    pad_to = chunk_rows if len(chunks) > 1 else (chunks[0][1] - chunks[0][0])
+
+    def _prep(j: int):
+        s, e = chunks[j]
+        return _pad_rows(tx[s:e], pad_to), _pad_rows(w[s:e], pad_to)
+
+    buf = jax.device_put(_prep(start_chunk))
+    for j in range(start_chunk, len(chunks)):
+        cur_tx, cur_w = buf
+        if j + 1 < len(chunks):
+            # enqueue next H2D before consuming the current chunk: async
+            # dispatch overlaps the copy with this chunk's kernel launches
+            buf = jax.device_put(_prep(j + 1))
+        acc = itemset_counts_into(
+            acc, cur_tx, tgt_d, cur_w, block_k=block_k, block_n=block_n,
+            interpret=interpret, use_kernel=use_kernel, accum=accum)
+        if on_chunk is not None:
+            on_chunk(j, acc)
+    return acc
+
+
+@dataclass
+class StreamingDB:
+    """Encoded, deduped, class-weighted transaction DB in host-side chunks.
+
+    Mirrors ``DenseDB`` (same encode discipline: support-descending vocab,
+    row dedup with per-class weights) but ``bits``/``weights`` stay numpy on
+    host and all counting goes through ``streaming_counts``.
+    """
+    vocab: ItemVocab
+    bits: np.ndarray       # (U, W) uint32 unique rows (host)
+    weights: np.ndarray    # (U, C) int32 per-class multiplicities (host)
+    n_rows: int            # original N (sum of weights)
+    n_classes: int
+    chunk_rows: int
+
+    @property
+    def n_chunks(self) -> int:
+        return len(stream_chunks(self.bits.shape[0], self.chunk_rows))
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.bits.nbytes + self.weights.nbytes)
+
+    @staticmethod
+    def encode(
+        transactions: Sequence[Sequence[Item]],
+        classes: Optional[Sequence[int]] = None,
+        n_classes: Optional[int] = None,
+        vocab: Optional[ItemVocab] = None,
+        min_item_count: int = 1,
+        chunk_rows: Optional[int] = None,
+    ) -> "StreamingDB":
+        if vocab is None:
+            vocab = ItemVocab.from_transactions(transactions,
+                                                min_count=min_item_count)
+        bits = encode_bitmap(transactions, vocab)
+        if classes is None:
+            w = np.ones((len(transactions), 1), np.int32)
+            n_classes = 1
+        else:
+            n_classes = n_classes or (int(max(classes)) + 1)
+            w = class_weights(classes, n_classes)
+        ub, uw = dedup_rows(bits, w)
+        if chunk_rows is None:
+            chunk_rows = choose_chunk_rows(vocab.n_words, n_classes)
+        return StreamingDB(vocab=vocab, bits=ub, weights=uw,
+                           n_rows=len(transactions), n_classes=n_classes,
+                           chunk_rows=chunk_rows)
+
+    @staticmethod
+    def from_dense(db, chunk_rows: Optional[int] = None) -> "StreamingDB":
+        """Host view of a ``DenseDB`` (duck-typed to avoid a module cycle)."""
+        bits = np.asarray(db.bits)
+        weights = np.asarray(db.weights)
+        if chunk_rows is None:
+            chunk_rows = choose_chunk_rows(bits.shape[1], weights.shape[1])
+        return StreamingDB(vocab=db.vocab, bits=bits, weights=weights,
+                           n_rows=db.n_rows, n_classes=db.n_classes,
+                           chunk_rows=chunk_rows)
+
+    def project(self, keep_items: Sequence[Item]) -> "StreamingDB":
+        """Column projection + re-dedup (GFP data reduction, host-side)."""
+        proj, sub = project_columns(self.bits, self.vocab, keep_items)
+        ub, uw = dedup_rows(proj, self.weights)
+        return replace(self, vocab=sub, bits=ub, weights=uw)
+
+    def counts(self, tgt_bits, **kwargs) -> jnp.ndarray:
+        kwargs.setdefault("chunk_rows", self.chunk_rows)
+        return streaming_counts(self.bits, tgt_bits, self.weights, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Level-synchronous mining over a StreamingDB with mid-level checkpointing.
+# ---------------------------------------------------------------------------
+
+def _level_itemsets_from_frequent(frequent, k) -> List[Tuple[Item, ...]]:
+    from ..core.apriori import apriori_gen
+    cands = apriori_gen(frequent, k)
+    return [tuple(sorted(s, key=repr)) for s in cands]  # deterministic order
+
+
+def _count_level(
+    db: StreamingDB,
+    itemsets: List[Tuple[Item, ...]],
+    level: int,
+    out: Dict[Tuple[Item, ...], int],
+    partial: Optional[dict],
+    checkpoint,                      # Optional[MiningCheckpoint]
+    *,
+    use_kernel: bool,
+    accum: str,
+    on_chunk: Optional[Callable[[int, int], None]] = None,
+) -> np.ndarray:
+    """One level's (K, C) counts, resuming from ``partial`` when it matches."""
+    masks = encode_targets(itemsets, db.vocab)
+    start, init = 0, None
+    wire = [list(t) for t in itemsets]  # JSON-stable identity of this level
+    if (partial and partial.get("level") == level
+            and partial.get("itemsets") == wire
+            # chunk indices only transfer between identical chunk geometries;
+            # a chunk_rows/row-count change restarts the level from chunk 0
+            and partial.get("chunk_rows") == db.chunk_rows
+            and partial.get("n_rows") == int(db.bits.shape[0])):
+        start = int(partial["next_chunk"])
+        init = np.asarray(partial["acc"], np.int32)
+
+    def _ckpt(j: int, acc) -> None:
+        if checkpoint is not None:
+            checkpoint.save(level - 1, out, partial={
+                "level": level, "itemsets": wire, "next_chunk": j + 1,
+                "acc": np.asarray(acc).tolist(),
+                "chunk_rows": db.chunk_rows,
+                "n_rows": int(db.bits.shape[0]),
+            })
+        if on_chunk is not None:  # after the save: a crash here resumes at j+1
+            on_chunk(level, j)
+
+    hook = _ckpt if (checkpoint is not None or on_chunk is not None) else None
+    rows = streaming_counts(
+        db.bits, masks, db.weights, chunk_rows=db.chunk_rows,
+        use_kernel=use_kernel, accum=accum, start_chunk=start, init=init,
+        on_chunk=hook)
+    return np.asarray(rows)
+
+
+def streaming_mine_frequent(
+    db: StreamingDB,
+    min_count: float,
+    *,
+    class_column: Optional[int] = None,
+    max_len: int = 0,
+    use_kernel: bool = True,
+    accum: str = "vpu_int32",
+    checkpoint=None,                 # Optional[MiningCheckpoint]
+    on_chunk: Optional[Callable[[int, int], None]] = None,
+) -> Dict[Tuple[Item, ...], int]:
+    """Exact level-synchronous mining, out-of-core, resumable mid-level.
+
+    Same contract as ``dense_mine_frequent`` (identical result dict).  With a
+    ``checkpoint``, progress is durable per chunk: a restart re-loads the
+    completed levels, regenerates the interrupted level's candidate list
+    (deterministic), and resumes its sweep from the last completed chunk.
+    ``on_chunk(level, chunk_idx)`` is a test/progress hook.
+    """
+    out: Dict[Tuple[Item, ...], int] = {}
+    partial: Optional[dict] = None
+    level = 0
+    if checkpoint is not None:
+        state = checkpoint.load_state()
+        if state is not None:
+            level = int(state["level"])
+            out = dict(state["frequent"])
+            partial = state.get("partial")
+
+    def _absorb(itemsets, rows) -> set:
+        frequent = set()
+        for itemset, row in zip(itemsets, rows):
+            cnt = (int(row.sum()) if class_column is None
+                   else int(row[class_column]))
+            if cnt >= min_count:
+                frequent.add(frozenset(itemset))
+                out[itemset] = cnt
+        return frequent
+
+    if level == 0:
+        singles = [(a,) for a in db.vocab.items]
+        frequent: set = set()
+        if singles:
+            rows = _count_level(db, singles, 1, out, partial, checkpoint,
+                                use_kernel=use_kernel, accum=accum,
+                                on_chunk=on_chunk)
+            partial = None
+            frequent = _absorb(singles, rows)
+        level = 1
+        if checkpoint is not None:
+            checkpoint.save(level, out)
+    else:
+        frequent = {frozenset(t) for t in out if len(t) == level}
+
+    while frequent and (max_len == 0 or level < max_len):
+        itemsets = _level_itemsets_from_frequent(frequent, level)
+        if not itemsets:
+            break
+        rows = _count_level(db, itemsets, level + 1, out, partial, checkpoint,
+                            use_kernel=use_kernel, accum=accum,
+                            on_chunk=on_chunk)
+        partial = None
+        frequent = _absorb(itemsets, rows)
+        level += 1
+        if checkpoint is not None:
+            checkpoint.save(level, out)
+    return out

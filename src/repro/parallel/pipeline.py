@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
+
 
 def pipeline_forward(
     stage_params: Any,          # pytree, leaves stacked on a leading S dim
@@ -40,7 +42,7 @@ def pipeline_forward(
     out_spec = P(None, batch_axis)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(param_specs, x_spec), out_specs=out_spec,
         check_vma=False,
     )

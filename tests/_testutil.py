@@ -1,0 +1,17 @@
+"""Shared test helpers (imported by name from the tests directory)."""
+import numpy as np
+
+
+def random_problem(rng, n, k, w, c, density=0.3):
+    """Random counting problem as numpy arrays: sparse (N, W) transaction
+    bitmap, (K, W) targets with 1-3 set bits (so containment happens), and
+    small non-negative (N, C) weights."""
+    tx = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
+    tx &= rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)  # sparsify
+    tgt = np.zeros((k, w), dtype=np.uint32)
+    for i in range(k):
+        for _ in range(rng.integers(1, 4)):
+            b = rng.integers(0, 32 * w)
+            tgt[i, b >> 5] |= np.uint32(1) << np.uint32(b & 31)
+    wts = rng.integers(0, 7, size=(n, c)).astype(np.int32)
+    return tx, tgt, wts

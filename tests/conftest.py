@@ -1,0 +1,24 @@
+"""Shared test config: ``--runslow`` gating for slow tests + seeded RNG."""
+import numpy as np
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (subprocess / multi-device end-to-end)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow to enable")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
+@pytest.fixture
+def rng():
+    """Deterministic per-test numpy RNG — reproducible failures."""
+    return np.random.default_rng(0xA5EED)

@@ -2,7 +2,7 @@
 and incremental mining with guided recounts (§5.2)."""
 import random
 
-from hypothesis import given, settings, strategies as st
+from _pbt import given, settings, strategies as st  # hypothesis or offline shim
 
 from repro.core import mine_frequent
 from repro.core.apriori_gfp import apriori_gfp

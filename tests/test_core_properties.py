@@ -12,7 +12,7 @@ Invariants:
 import math
 from typing import List
 
-from hypothesis import given, settings, strategies as st
+from _pbt import given, settings, strategies as st  # hypothesis or offline shim
 
 from repro.core import (
     FPTree, ItemOrder, TISTree, apriori, brute_force_counts, fp_growth,

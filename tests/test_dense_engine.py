@@ -1,7 +1,7 @@
 """Dense (TPU-native) engine vs paper-faithful host engine vs brute force."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _pbt import given, settings, strategies as st  # hypothesis or offline shim
 
 from repro.core import (ItemOrder, TISTree, brute_force_counts, mine_frequent,
                         minority_report)

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _pbt import given, settings, strategies as st  # hypothesis or offline shim
 
 from repro.core import brute_force_counts
 from repro.kernels.itemset_count import (itemset_counts, itemset_counts_ref,
@@ -12,16 +12,11 @@ from repro.kernels.itemset_count import (itemset_counts, itemset_counts_ref,
 from repro.kernels.itemset_count.kernel import itemset_counts_pallas
 
 
+from _testutil import random_problem
+
+
 def _random_problem(rng, n, k, w, c, density=0.3):
-    tx = rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)
-    tx &= rng.integers(0, 2 ** 32, size=(n, w), dtype=np.uint32)  # sparsify
-    # targets: few set bits so containment actually happens
-    tgt = np.zeros((k, w), dtype=np.uint32)
-    for i in range(k):
-        for _ in range(rng.integers(1, 4)):
-            b = rng.integers(0, 32 * w)
-            tgt[i, b >> 5] |= np.uint32(1) << np.uint32(b & 31)
-    wts = rng.integers(0, 7, size=(n, c)).astype(np.int32)
+    tx, tgt, wts = random_problem(rng, n, k, w, c, density)
     return jnp.asarray(tx), jnp.asarray(tgt), jnp.asarray(wts)
 
 
@@ -170,3 +165,52 @@ def test_mxu_f32_bound_enforced():
     w = jnp.ones((1, 1), jnp.int32)
     # fine under the bound
     itemset_counts(tx, tgt, w, accum="mxu_f32")
+
+
+@pytest.mark.parametrize("n,k,w,c,bk,bn", [
+    (64, 8, 2, 2, 8, 128),
+    (1111, 77, 5, 3, 32, 256),       # multi-tile + ragged on both axes
+    (2048, 256, 4, 1, 256, 1024),    # exact blocks
+])
+def test_mxu_f32_differential_parity(n, k, w, c, bk, bn):
+    """MXU f32 == VPU int32 == jnp oracle, element for element."""
+    rng = np.random.default_rng(n + k)
+    tx, tgt, wts = _random_problem(rng, n, k, w, c)
+    got_mxu = itemset_counts(tx, tgt, wts, accum="mxu_f32",
+                             block_k=bk, block_n=bn)
+    got_vpu = itemset_counts(tx, tgt, wts, accum="vpu_int32",
+                             block_k=bk, block_n=bn)
+    want = itemset_counts_ref(tx, tgt, wts)
+    np.testing.assert_array_equal(np.asarray(got_mxu), np.asarray(got_vpu))
+    np.testing.assert_array_equal(np.asarray(got_mxu), np.asarray(want))
+
+
+def test_mxu_f32_exact_near_2p24_bound():
+    """Counts just below the 2^24 f32-exactness bound stay bit-exact: every
+    partial sum is an integer < 2^24, each exactly representable in f32."""
+    n = 8
+    tx = jnp.asarray(np.full((n, 1), 0xFFFFFFFF, np.uint32))  # contain all
+    tgt = np.zeros((3, 1), np.uint32)
+    tgt[1, 0] = 1
+    tgt[2, 0] = 0b11
+    tgt = jnp.asarray(tgt)
+    wts = jnp.asarray(np.full((n, 1), (1 << 21) - 1, np.int32))
+    got_mxu = itemset_counts(tx, tgt, wts, accum="mxu_f32")
+    got_vpu = itemset_counts(tx, tgt, wts, accum="vpu_int32")
+    want = itemset_counts_ref(tx, tgt, wts)
+    np.testing.assert_array_equal(np.asarray(got_mxu), np.asarray(got_vpu))
+    np.testing.assert_array_equal(np.asarray(got_mxu), np.asarray(want))
+    # the count itself sits 8 below the bound — and is odd-valued, so any
+    # f32 rounding above 2^24 would have been visible
+    assert int(np.asarray(got_mxu)[0, 0]) == (1 << 24) - 8
+
+
+def test_mxu_f32_row_bound_asserted():
+    """N >= 2^24 rows per launch must be rejected (ops.py exactness guard);
+    the streaming engine re-establishes the bound per chunk instead."""
+    n = 1 << 24
+    tx = jnp.zeros((n, 1), jnp.uint32)
+    tgt = jnp.zeros((1, 1), jnp.uint32)
+    w = jnp.ones((n, 1), jnp.int32)
+    with pytest.raises(AssertionError):
+        itemset_counts(tx, tgt, w, accum="mxu_f32")

@@ -1,0 +1,363 @@
+"""Streaming out-of-core engine: chunked sweep == single-pass dense == oracle
+for every chunking (incl. chunk > N and ragged tails), engine threading
+through the mining stack, and mid-level checkpoint kill/resume."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _pbt import given, settings, strategies as st  # hypothesis or offline shim
+
+from repro.core import mine_frequent, minority_report
+from repro.kernels.itemset_count import (itemset_counts, itemset_counts_into,
+                                         itemset_counts_ref)
+from repro.mining import (DenseDB, ItemVocab, StreamingDB, choose_chunk_rows,
+                          dense_gfp_counts, dense_mine_frequent, encode_bitmap,
+                          encode_targets, minority_report_dense,
+                          stream_chunks, streaming_counts,
+                          streaming_mine_frequent)
+from _testutil import random_problem as _random_problem
+from repro.mining.distributed import MiningCheckpoint
+
+
+# ------------------------------------------------------------- chunk planner
+def test_stream_chunks_cover_and_ragged():
+    assert stream_chunks(10, 4) == [(0, 4), (4, 8), (8, 10)]   # ragged tail
+    assert stream_chunks(4, 4) == [(0, 4)]
+    assert stream_chunks(3, 100) == [(0, 3)]                   # chunk > N
+    assert stream_chunks(0, 4) == []
+    with pytest.raises(ValueError):
+        stream_chunks(10, 0)
+    spans = stream_chunks(1001, 7)
+    assert spans[0][0] == 0 and spans[-1][1] == 1001
+    assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+
+
+def test_choose_chunk_rows_budget_and_align():
+    rows = choose_chunk_rows(4, 2, budget_bytes=1 << 20, align=128)
+    assert rows % 128 == 0
+    assert rows * 4 * (4 + 2) <= (1 << 20)
+    # tiny budget still returns the alignment floor
+    assert choose_chunk_rows(64, 8, budget_bytes=1, align=128) == 128
+
+
+# ---------------------------------------------------- bit-identical counting
+@pytest.mark.parametrize("chunk", [7, 64, 128, 300, 301, 10_000])
+def test_streaming_counts_bit_identical(chunk):
+    rng = np.random.default_rng(chunk)
+    tx, tgt, wts = _random_problem(rng, 300, 17, 3, 2)
+    got = np.asarray(streaming_counts(tx, tgt, wts, chunk_rows=chunk))
+    dense = np.asarray(itemset_counts(jnp.asarray(tx), jnp.asarray(tgt),
+                                      jnp.asarray(wts)))
+    want = np.asarray(itemset_counts_ref(jnp.asarray(tx), jnp.asarray(tgt),
+                                         jnp.asarray(wts)))
+    np.testing.assert_array_equal(got, dense)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_streaming_counts_empty_and_resume_args():
+    tx, tgt, wts = _random_problem(np.random.default_rng(0), 50, 5, 2, 2)
+    assert streaming_counts(tx, np.zeros((0, 2), np.uint32), wts).shape == (0, 2)
+    assert streaming_counts(np.zeros((0, 2), np.uint32), tgt,
+                            np.zeros((0, 2), np.int32)).shape == (5, 2)
+    # manual two-stage resume == one sweep
+    full = np.asarray(streaming_counts(tx, tgt, wts, chunk_rows=16))
+    first = None
+
+    def grab(j, acc):
+        nonlocal first
+        if j == 1:
+            first = np.asarray(acc)
+
+    np.asarray(streaming_counts(tx, tgt, wts, chunk_rows=16, on_chunk=grab))
+    resumed = np.asarray(streaming_counts(tx, tgt, wts, chunk_rows=16,
+                                          start_chunk=2, init=first))
+    np.testing.assert_array_equal(resumed, full)
+
+
+def test_itemset_counts_into_accumulates():
+    rng = np.random.default_rng(2)
+    tx, tgt, wts = _random_problem(rng, 200, 9, 2, 3)
+    acc = jnp.zeros((9, 3), jnp.int32)
+    acc = itemset_counts_into(acc, jnp.asarray(tx[:120]), jnp.asarray(tgt),
+                              jnp.asarray(wts[:120]))
+    acc = itemset_counts_into(acc, jnp.asarray(tx[120:]), jnp.asarray(tgt),
+                              jnp.asarray(wts[120:]))
+    want = itemset_counts_ref(jnp.asarray(tx), jnp.asarray(tgt),
+                              jnp.asarray(wts))
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=200),    # n
+    st.integers(min_value=1, max_value=20),     # k
+    st.integers(min_value=1, max_value=3),      # w
+    st.integers(min_value=1, max_value=3),      # c
+    st.integers(min_value=1, max_value=250),    # chunk_rows
+    st.integers(min_value=0, max_value=2 ** 31 - 1),
+)
+def test_streaming_property_random(n, k, w, c, chunk, seed):
+    rng = np.random.default_rng(seed)
+    tx, tgt, wts = _random_problem(rng, n, k, w, c)
+    got = np.asarray(streaming_counts(tx, tgt, wts, chunk_rows=chunk))
+    want = np.asarray(itemset_counts_ref(jnp.asarray(tx), jnp.asarray(tgt),
+                                         jnp.asarray(wts)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("accum", ["vpu_int32", "mxu_f32"])
+def test_streaming_accum_variants(accum):
+    """Chunking re-establishes the mxu_f32 per-launch bound per chunk."""
+    rng = np.random.default_rng(3)
+    tx, tgt, wts = _random_problem(rng, 400, 11, 2, 2)
+    got = np.asarray(streaming_counts(tx, tgt, wts, chunk_rows=96, accum=accum))
+    want = np.asarray(itemset_counts_ref(jnp.asarray(tx), jnp.asarray(tgt),
+                                         jnp.asarray(wts)))
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------ StreamingDB
+def test_streaming_db_mirrors_dense_db():
+    rng = np.random.default_rng(4)
+    db = [[i for i in range(20) if rng.random() < 0.3] for _ in range(250)]
+    y = rng.integers(0, 2, 250)
+    ddb = DenseDB.encode(db, classes=list(y), n_classes=2)
+    sdb = StreamingDB.encode(db, classes=list(y), n_classes=2, chunk_rows=32)
+    assert sdb.vocab.items == ddb.vocab.items
+    np.testing.assert_array_equal(sdb.bits, np.asarray(ddb.bits))
+    np.testing.assert_array_equal(sdb.weights, np.asarray(ddb.weights))
+    assert sdb.n_chunks == -(-sdb.bits.shape[0] // 32)
+
+    targets = [(a,) for a in sdb.vocab.items[:6]]
+    masks = encode_targets(targets, sdb.vocab)
+    np.testing.assert_array_equal(
+        np.asarray(sdb.counts(masks)),
+        np.asarray(itemset_counts(ddb.bits, jnp.asarray(masks), ddb.weights)))
+
+    proj = sdb.project(sdb.vocab.items[:5])
+    dproj = ddb.project(ddb.vocab.items[:5])
+    np.testing.assert_array_equal(proj.bits, np.asarray(dproj.bits))
+
+
+def test_streaming_db_from_dense_roundtrip():
+    rng = np.random.default_rng(5)
+    db = [[i for i in range(10) if rng.random() < 0.4] for _ in range(100)]
+    ddb = DenseDB.encode(db)
+    sdb = StreamingDB.from_dense(ddb, chunk_rows=8)
+    assert sdb.n_rows == ddb.n_rows and sdb.chunk_rows == 8
+    np.testing.assert_array_equal(sdb.bits, np.asarray(ddb.bits))
+
+
+# ------------------------------------------------- mining stack threading
+def test_dense_gfp_counts_streaming_path():
+    from repro.core import ItemOrder, TISTree, brute_force_counts
+
+    rng = np.random.default_rng(6)
+    db = [[i for i in range(12) if rng.random() < 0.35] for _ in range(150)]
+    counts = {}
+    for t in db:
+        for a in set(t):
+            counts[a] = counts.get(a, 0) + 1
+    order = ItemOrder.from_counts(counts)
+    tis = TISTree(order)
+    for t in ([0, 1], [2], [3, 4], [1, 5, 6], [7]):
+        t = [a for a in t if a in order]
+        if t:
+            tis.insert(t, target=True)
+    ddb = DenseDB.encode(db)
+    base = dense_gfp_counts(tis, ddb)
+    via_flag = dense_gfp_counts(tis, ddb, streaming=True, chunk_rows=16)
+    via_sdb = dense_gfp_counts(tis, StreamingDB.from_dense(ddb, chunk_rows=16))
+    assert base.keys() == via_flag.keys() == via_sdb.keys()
+    for k in base:
+        np.testing.assert_array_equal(base[k], via_flag[k])
+        np.testing.assert_array_equal(base[k], via_sdb[k])
+    want = brute_force_counts(db, list(base.keys()))
+    assert {k: int(v[0]) for k, v in via_flag.items()} == want
+
+
+@pytest.mark.parametrize("chunk", [16, 64, 1000])
+def test_streaming_mine_equals_dense_and_host(chunk):
+    rng = np.random.default_rng(chunk)
+    db = [[i for i in range(14) if rng.random() < 0.35] for _ in range(220)]
+    want = mine_frequent(db, 35)
+    ddb = DenseDB.encode(db)
+    assert dense_mine_frequent(ddb, 35) == want
+    assert dense_mine_frequent(ddb, 35, streaming=True, chunk_rows=chunk) == want
+    sdb = StreamingDB.encode(db, chunk_rows=chunk)
+    assert streaming_mine_frequent(sdb, 35) == want
+
+
+def test_minority_report_dense_streaming_identical_rules():
+    rng = np.random.default_rng(8)
+    db = [[i for i in range(16) if rng.random() < 0.3] for _ in range(300)]
+    y = [int(rng.random() < 0.15) for _ in range(300)]
+    host = minority_report(db, y, min_support=0.02, min_confidence=0.1)
+    dense = minority_report_dense(db, y, min_support=0.02, min_confidence=0.1)
+    stream = minority_report_dense(db, y, min_support=0.02, min_confidence=0.1,
+                                   streaming=True, chunk_rows=24)
+    key = lambda rs: [(r.antecedent, r.count, r.g_count) for r in rs]
+    assert key(stream.rules) == key(dense.rules) == key(host.rules)
+    assert stream.engine == "streaming" and dense.engine == "dense"
+
+
+def test_distributed_counts_chunked_single_device():
+    import jax
+
+    from repro.mining.distributed import distributed_counts
+
+    rng = np.random.default_rng(9)
+    db = [[i for i in range(12) if rng.random() < 0.35] for _ in range(180)]
+    vocab = ItemVocab.from_transactions(db)
+    bits = encode_bitmap(db, vocab)
+    w = np.ones((180, 1), np.int32)
+    targets = [(a,) for a in vocab.items[:8]]
+    masks = encode_targets(targets, vocab)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    whole = distributed_counts(bits, masks, w, mesh)
+    chunked = distributed_counts(bits, masks, w, mesh, chunk_rows=33)
+    np.testing.assert_array_equal(whole, chunked)
+
+
+# ------------------------------------------------- checkpoint kill/resume
+class _Preempted(Exception):
+    pass
+
+
+def test_checkpoint_mid_level_kill_resume(tmp_path):
+    rng = np.random.default_rng(10)
+    db = [[i for i in range(10) if rng.random() < 0.4] for _ in range(200)]
+    want = mine_frequent(db, 40)
+    sdb = StreamingDB.encode(db, chunk_rows=16)
+    assert sdb.n_chunks >= 4  # several chunks per level or the test is vacuous
+
+    ckpt = MiningCheckpoint(str(tmp_path / "mine.json"))
+    calls = []
+
+    def die_mid_level_2(level, chunk):
+        calls.append((level, chunk))
+        if len(calls) == sdb.n_chunks + 3:  # 3 chunks into level 2
+            raise _Preempted()
+
+    with pytest.raises(_Preempted):
+        streaming_mine_frequent(sdb, 40, checkpoint=ckpt,
+                                on_chunk=die_mid_level_2)
+
+    # the durable state holds a mid-level partial at the right chunk
+    state = json.load(open(str(tmp_path / "mine.json")))
+    assert state["level"] == 1  # level 1 complete, level 2 in flight
+    assert state["partial"]["level"] == 2
+    assert state["partial"]["next_chunk"] == 3
+
+    resumed = []
+    got = streaming_mine_frequent(
+        sdb, 40, checkpoint=ckpt,
+        on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == want                      # identical rules after resume
+    assert resumed[0] == (2, 3)             # resumed mid-level, chunk 3
+    assert len(resumed) < len(calls) + sdb.n_chunks  # skipped counted work
+
+
+def test_checkpoint_resume_after_complete_level(tmp_path):
+    """Kill exactly on a level boundary: resume regenerates the next level."""
+    rng = np.random.default_rng(11)
+    db = [[i for i in range(9) if rng.random() < 0.45] for _ in range(150)]
+    want = mine_frequent(db, 30)
+    sdb = StreamingDB.encode(db, chunk_rows=20)
+    ckpt = MiningCheckpoint(str(tmp_path / "mine.json"))
+    calls = []
+
+    def die_on_boundary(level, chunk):
+        calls.append((level, chunk))
+        if level == 2 and chunk == sdb.n_chunks - 1:
+            raise _Preempted()  # after level 2's last chunk save, pre-absorb
+
+    with pytest.raises(_Preempted):
+        streaming_mine_frequent(sdb, 30, checkpoint=ckpt,
+                                on_chunk=die_on_boundary)
+    got = streaming_mine_frequent(sdb, 30, checkpoint=ckpt)
+    assert got == want
+
+
+def test_checkpoint_resume_rejects_changed_chunking(tmp_path):
+    """A partial saved under one chunk geometry must NOT seed a resume under
+    another (chunk indices don't transfer): the level restarts from chunk 0
+    and the result stays exact."""
+    from dataclasses import replace
+
+    rng = np.random.default_rng(12)
+    db = [[i for i in range(10) if rng.random() < 0.4] for _ in range(200)]
+    want = mine_frequent(db, 40)
+    sdb = StreamingDB.encode(db, chunk_rows=16)
+    ckpt = MiningCheckpoint(str(tmp_path / "mine.json"))
+    calls = []
+
+    def die_mid_level_2(level, chunk):
+        calls.append((level, chunk))
+        if len(calls) == sdb.n_chunks + 3:
+            raise _Preempted()
+
+    with pytest.raises(_Preempted):
+        streaming_mine_frequent(sdb, 40, checkpoint=ckpt,
+                                on_chunk=die_mid_level_2)
+
+    resumed = []
+    got = streaming_mine_frequent(
+        replace(sdb, chunk_rows=8), 40, checkpoint=ckpt,
+        on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == want
+    assert resumed[0] == (2, 0)  # level restarted, not resumed mid-sweep
+
+
+def test_streaming_counts_int32_overflow_guard():
+    tx = np.full((2, 1), 0xFFFFFFFF, np.uint32)
+    tgt = np.zeros((1, 1), np.uint32)
+    w = np.full((2, 1), 1 << 30, np.int32)  # column sum = 2^31 > int32 max
+    with pytest.raises(OverflowError):
+        streaming_counts(tx, tgt, w, chunk_rows=1)
+
+
+def test_distributed_counts_int32_overflow_guard():
+    import jax
+
+    from repro.mining.distributed import distributed_counts
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tx = np.full((2, 1), 0xFFFFFFFF, np.uint32)
+    tgt = np.zeros((1, 1), np.uint32)
+    w = np.full((2, 1), 1 << 30, np.int32)
+    with pytest.raises(OverflowError):
+        distributed_counts(tx, tgt, w, mesh)
+
+
+def test_explicit_streaming_false_wins_and_checkpoint_conflicts(tmp_path):
+    """streaming=False must mean the same thing at every entry point, and a
+    checkpoint (streaming-only feature) with streaming=False is an error."""
+    rng = np.random.default_rng(13)
+    db = [[i for i in range(8) if rng.random() < 0.4] for _ in range(60)]
+    y = [int(rng.random() < 0.3) for _ in range(60)]
+    ck = MiningCheckpoint(str(tmp_path / "c.json"))
+    with pytest.raises(ValueError):
+        minority_report_dense(db, y, min_support=0.05, min_confidence=0.1,
+                              streaming=False, checkpoint=ck)
+    with pytest.raises(ValueError):
+        dense_mine_frequent(DenseDB.encode(db), 5, streaming=False,
+                            checkpoint=ck)
+    # explicit False + chunk_rows: dense engine, chunk_rows ignored
+    res = minority_report_dense(db, y, min_support=0.05, min_confidence=0.1,
+                                streaming=False, chunk_rows=7)
+    assert res.engine == "dense"
+
+
+def test_checkpoint_backward_compatible_load(tmp_path):
+    """Old-format payloads (no 'partial' key) still load."""
+    path = str(tmp_path / "old.json")
+    with open(path, "w") as f:
+        json.dump({"level": 2, "frequent": [[[1], 5], [[1, 2], 3]],
+                   "meta": {}}, f)
+    ck = MiningCheckpoint(path)
+    level, freq, meta = ck.load()
+    assert level == 2 and freq == {(1,): 5, (1, 2): 3}
+    state = ck.load_state()
+    assert state["partial"] is None

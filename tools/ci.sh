@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entry point: fast tier first (fail fast, no slow tests), then the full
+# suite including the slow multi-device subprocess tests, then the streaming
+# perf record (BENCH_streaming.json artifact).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== fast tier (pytest -m 'not slow') ==="
+python -m pytest -x -q -m "not slow"
+
+echo "=== full suite (--runslow) ==="
+python -m pytest -q --runslow
+
+echo "=== streaming perf record ==="
+python -m benchmarks.streaming --json BENCH_streaming.json
