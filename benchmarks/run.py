@@ -8,6 +8,7 @@ fig6    — paper Fig 6 (census-like categorical data) runtime + ratios
 kernel  — counting-kernel micro + GFP §3.1 optimization ablation
 scaling — distributed engine strong-scaling on an 8-device host mesh
 stream  — streaming out-of-core sweep vs single-pass dense counting
+serve   — micro-batched count serving vs per-query launches, cold/warm cache
 """
 import argparse
 import sys
@@ -16,7 +17,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig5", "fig6", "kernel", "scaling", "stream"])
+                    choices=["fig5", "fig6", "kernel", "scaling", "stream",
+                             "serve"])
     args = ap.parse_args()
 
     from .common import emit
@@ -37,6 +39,9 @@ def main() -> None:
     if args.only in (None, "stream"):
         from . import streaming
         suites["stream"] = streaming.run
+    if args.only in (None, "serve"):
+        from . import serve
+        suites["serve"] = serve.run
 
     print("name,us_per_call,derived")
     ok = True

@@ -1,0 +1,146 @@
+"""Serving benchmark: micro-batched count serving vs one-launch-per-query.
+
+Serves a fixed pool of itemset queries through ``CountServer`` at several
+micro-batch sizes with the cache off (cold) and then repeats the hottest
+workload with the cache on (warm), against the naive baseline of one kernel
+launch per query.  Every counting launch sweeps the whole resident bitmap
+regardless of target count, so batching amortizes the sweep — the number the
+perf trajectory tracks.  Run as a script it emits ``BENCH_serve.json``.
+
+  PYTHONPATH=src python -m benchmarks.serve [--json BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import json
+from typing import List
+
+import numpy as np
+
+from repro.data import bernoulli_db
+from repro.kernels.itemset_count import itemset_counts
+from repro.mining import DenseDB, encode_targets
+from repro.serve import CountServer
+
+from .common import Row, timeit
+
+ROWS, ITEMS, POOL = 16384, 48, 256
+BATCHES = [1, 4, 16, 64]
+WARM_BATCH = 64
+
+
+def _workload(seed: int = 0):
+    tx, y = bernoulli_db(ROWS, ITEMS, p_x=0.15, p_y=0.05, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    pool = [tuple(rng.choice(ITEMS, size=rng.integers(1, 4),
+                             replace=False).tolist())
+            for _ in range(POOL)]
+    return tx, y, pool
+
+
+def _serve_pool(server: CountServer, pool, batch: int):
+    results = {}
+    for s in range(0, len(pool), batch):
+        tickets = [(server.submit(f"c{i % 8}", [key]), key)
+                   for i, key in enumerate(pool[s:s + batch])]
+        got = server.flush()
+        for ticket, key in tickets:
+            results[key] = got[ticket][0]
+    return results
+
+
+def run(record: List[dict] | None = None) -> List[Row]:
+    import jax.numpy as jnp
+
+    tx, y, pool = _workload()
+    ddb = DenseDB.encode(tx, classes=list(y), n_classes=2)
+    masks = encode_targets(pool, ddb.vocab)
+    ref = np.asarray(itemset_counts(ddb.bits, jnp.asarray(masks),
+                                    ddb.weights))
+    want = {key: ref[i] for i, key in enumerate(pool)}
+
+    rows: List[Row] = []
+    tag = f"serve[N={ROWS},pool={POOL}]"
+
+    # ---- baseline: one kernel launch per query -----------------------------
+    masks_d = [jnp.asarray(masks[i:i + 1]) for i in range(POOL)]
+
+    def per_query():
+        for m in masks_d:
+            np.asarray(itemset_counts(ddb.bits, m, ddb.weights))
+
+    us_base = timeit(per_query, repeats=3, warmup=1) / POOL
+    rows.append((f"{tag}/per_query_launch", us_base, "baseline"))
+    if record is not None:
+        record.append({"variant": "per_query_launch", "batch": 1,
+                       "cache": "off", "us_per_query": us_base,
+                       "qps": 1e6 / us_base})
+
+    # ---- cold micro-batched serving at several batch sizes -----------------
+    us_cold = {}
+    for batch in BATCHES:
+        server = CountServer(tx, classes=list(y), cache=False)
+        got = _serve_pool(server, pool, batch)
+        assert all((got[k] == want[k]).all() for k in pool), batch
+        us = timeit(lambda: _serve_pool(server, pool, batch),
+                    repeats=3, warmup=1) / POOL
+        us_cold[batch] = us
+        speedup = us_base / us
+        rows.append((f"{tag}/batch={batch}(cold)", us,
+                     f"speedup_vs_per_query={speedup:.2f}x"))
+        if record is not None:
+            record.append({"variant": "micro_batched", "batch": batch,
+                           "cache": "off", "us_per_query": us,
+                           "qps": 1e6 / us,
+                           "speedup_vs_per_query": speedup,
+                           "beats_per_query": us < us_base})
+
+    # ---- warm cache: repeat queries skip the device ------------------------
+    server = CountServer(tx, classes=list(y), cache=True)
+    got = _serve_pool(server, pool, WARM_BATCH)   # prime (all misses)
+    assert all((got[k] == want[k]).all() for k in pool)
+    us_warm = timeit(lambda: _serve_pool(server, pool, WARM_BATCH),
+                     repeats=3, warmup=1) / POOL
+    got = _serve_pool(server, pool, WARM_BATCH)   # still exact from cache
+    assert all((got[k] == want[k]).all() for k in pool)
+    warm_speedup = us_cold[WARM_BATCH] / us_warm
+    rows.append((f"{tag}/batch={WARM_BATCH}(warm)", us_warm,
+                 f"vs_cold={warm_speedup:.1f}x;hit_rate="
+                 f"{server.cache.hit_rate:.2f}"))
+    if record is not None:
+        record.append({"variant": "micro_batched", "batch": WARM_BATCH,
+                       "cache": "on", "us_per_query": us_warm,
+                       "qps": 1e6 / us_warm,
+                       "warm_vs_cold_speedup": warm_speedup,
+                       "cache_hit_rate": server.cache.hit_rate})
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    record: List[dict] = []
+    rows = run(record)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    payload = {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "problem": {"rows": ROWS, "items": ITEMS, "pool": POOL,
+                    "batches": BATCHES},
+        "rows": record,
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.json} ({len(record)} records)")
+
+
+if __name__ == "__main__":
+    main()

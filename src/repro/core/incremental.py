@@ -20,7 +20,8 @@ itemset trees do); the frequent-itemset *mining* threshold is still theta.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Hashable, List, Sequence, Tuple
+from typing import (Dict, Hashable, Iterable, List, Optional, Sequence,
+                    Tuple)
 
 from .fpgrowth import mine_frequent
 from .fptree import FPTree, ItemOrder
@@ -28,6 +29,28 @@ from .gfp import GFPStats, gfp_growth
 from .tis import TISTree
 
 Item = Hashable
+Key = Tuple[Item, ...]
+
+
+def incremental_candidates(
+    prev_frequent: Iterable[Key],
+    inc_frequent: Iterable[Key],
+) -> Tuple[List[Key], List[Key]]:
+    """§5.2 pigeonhole candidate set, partitioned.
+
+    Returns ``(previously, newly)``: the itemsets frequent before the
+    increment, and those frequent in the increment but not before — disjoint,
+    each repr-sorted (deterministic).  Their union is COMPLETE: if
+    C(α) >= θ(n₀+n₁) then C₀(α) >= θ·n₀ or C₁(α) >= θ·n₁, so any
+    combined-frequent itemset is in one of the two lists.  Shared by the host
+    ``IncrementalMiner`` (guided FP-tree recounts per partition) and the
+    engine-backed recount in ``repro.serve`` (one dense/streaming batch over
+    the union).
+    """
+    prev = set(prev_frequent)
+    previously = sorted(prev, key=repr)
+    newly = sorted((k for k in inc_frequent if k not in prev), key=repr)
+    return previously, newly
 
 
 @dataclass
@@ -47,7 +70,22 @@ class IncrementalMiner:
         if not (0.0 < theta <= 1.0):
             raise ValueError("theta in (0, 1]")
         self.theta = theta
-        self.state: IncrementalState = None  # type: ignore
+        self.state: Optional[IncrementalState] = None
+
+    def _require_state(self) -> IncrementalState:
+        if self.state is None:
+            raise RuntimeError("call fit() first")
+        return self.state
+
+    @property
+    def frequent(self) -> Dict[Tuple[Item, ...], int]:
+        """Current frequent set with counts (requires ``fit()``)."""
+        return dict(self._require_state().frequent)
+
+    @property
+    def n_seen(self) -> int:
+        """Transactions folded in so far (requires ``fit()``)."""
+        return self._require_state().n
 
     # -- bootstrap -----------------------------------------------------------
     def fit(self, transactions: Sequence[Sequence[Item]]) -> Dict[Tuple[Item, ...], int]:
@@ -66,7 +104,7 @@ class IncrementalMiner:
 
     # -- increment -----------------------------------------------------------
     def update(self, new_transactions: Sequence[Sequence[Item]]) -> Dict[Tuple[Item, ...], int]:
-        st = self.state
+        st = self._require_state()
         inc = [list(t) for t in new_transactions]
         n1 = len(inc)
         n_total = st.n + n1
@@ -90,13 +128,14 @@ class IncrementalMiner:
         #    level: candidates must reach theta*n1 in the increment (pigeonhole).
         inc_min = _ceil(self.theta * n1)
         inc_frequent = mine_frequent(inc, inc_min, order=st.order)
+        previously, newly = incremental_candidates(st.frequent, inc_frequent)
 
         # 2) Guided recount of previously-frequent itemsets in the increment
         #    (small tree) — refresh their counts.
         inc_tree = FPTree.build(inc, st.order)
-        if st.frequent:
+        if previously:
             tis_old = TISTree(st.order)
-            for itemset in st.frequent:
+            for itemset in previously:
                 tis_old.insert(itemset, target=True)
             st.stats.merge(gfp_growth(tis_old, inc_tree))
             old_updated = {
@@ -108,7 +147,6 @@ class IncrementalMiner:
 
         # 3) Guided recount, in the HUGE original tree, of itemsets newly
         #    frequent in the increment only — the paper's §5.2 focus.
-        newly = [k for k in inc_frequent if k not in st.frequent]
         new_counts: Dict[Tuple[Item, ...], int] = {}
         if newly:
             tis_new = TISTree(st.order)
@@ -131,6 +169,13 @@ class IncrementalMiner:
         return dict(frequent)
 
 
-def _ceil(x: float) -> int:
+def ceil_count(x: float) -> int:
+    """The repo-wide frequency threshold rule: ``count >= x`` with a float
+    threshold, epsilon-guarded against FP noise, floored at 1.  Shared by the
+    host miners (``mra``-style inline until consolidated), the incremental
+    miner, and the serving engine — the parity tests assume ONE rule."""
     import math
     return max(1, math.ceil(x - 1e-9))
+
+
+_ceil = ceil_count  # internal alias

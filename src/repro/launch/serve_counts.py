@@ -1,0 +1,143 @@
+"""Count-serving launcher — drive the GFP count server with a query workload.
+
+  PYTHONPATH=src python -m repro.launch.serve_counts --rows 20000 --items 40 \
+      --clients 8 --rounds 16 --batch 32 --appends 2 --verify
+
+Builds a synthetic transaction DB, keeps it resident in a ``CountServer``
+(device-dense or host-streaming by size), and serves rounds of micro-batched
+itemset-count queries from simulated clients — with optional mid-run appends
+(version bumps + cache invalidation) and ``--theta`` incremental re-mining.
+``--verify`` cross-checks every distinct served key against a fresh dense
+encode of the full history at the final version (bit-identical or it dies).
+"""
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=20000)
+    ap.add_argument("--items", type=int, default=40)
+    ap.add_argument("--p-x", type=float, default=0.15)
+    ap.add_argument("--p-y", type=float, default=0.05)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=16,
+                    help="flush rounds; each round submits --batch requests")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="requests coalesced per flush (micro-batch size)")
+    ap.add_argument("--targets-per-query", type=int, default=2)
+    ap.add_argument("--max-itemset-len", type=int, default=3)
+    ap.add_argument("--pool", type=int, default=128,
+                    help="distinct query pool size (repeats exercise the cache)")
+    ap.add_argument("--appends", type=int, default=0,
+                    help="mid-run append batches (version bumps)")
+    ap.add_argument("--append-rows", type=int, default=1000)
+    ap.add_argument("--theta", type=float, default=None,
+                    help="maintain the frequent set incrementally at theta")
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--cache-size", type=int, default=65536)
+    ap.add_argument("--block-k", type=int, default=256)
+    ap.add_argument("--streaming", action="store_true",
+                    help="force the host-resident streaming backend")
+    ap.add_argument("--chunk-rows", type=int, default=None)
+    ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import numpy as np
+
+    from ..data import bernoulli_db
+    from ..serve import CountServer
+
+    tx, y = bernoulli_db(args.rows, args.items, args.p_x, args.p_y, args.seed)
+    server = CountServer(
+        tx, classes=list(y), use_kernel=True,
+        streaming=True if args.streaming else None,
+        chunk_rows=args.chunk_rows, cache=not args.no_cache,
+        cache_size=args.cache_size, block_k=args.block_k)
+    st = server.store
+    print(f"resident: {st.resident} DB, {st.base_rows} unique rows "
+          f"(of {st.n_rows}), {st.vocab.size} items, v{st.version}")
+    if args.theta is not None:
+        t0 = time.time()
+        freq = server.mine(args.theta)
+        print(f"mined {len(freq)} frequent itemsets at theta={args.theta} "
+              f"({time.time() - t0:.2f}s)")
+
+    rng = np.random.default_rng(args.seed + 1)
+    pool = [tuple(rng.choice(args.items,
+                             size=rng.integers(1, args.max_itemset_len + 1),
+                             replace=False).tolist())
+            for _ in range(args.pool)]
+    # spread appends over rounds 1..rounds-1 without collapsing: linspace
+    # over the ROUND INDICES keeps every pick distinct (spacing >= 1) and
+    # caps the count at the available rounds
+    avail = list(range(1, args.rounds))
+    n_app = min(args.appends, len(avail))
+    append_at = ({avail[i] for i in
+                  np.linspace(0, len(avail) - 1, n_app).round().astype(int)}
+                 if n_app > 0 else set())
+    if len(append_at) < args.appends:
+        print(f"note: only {len(append_at)} append rounds fit in "
+              f"--rounds {args.rounds}")
+
+    n_queries = 0
+    t_serve = 0.0
+    for rnd in range(args.rounds):
+        if rnd in append_at:
+            batch, yb = bernoulli_db(args.append_rows, args.items, args.p_x,
+                                     args.p_y, args.seed + 100 + rnd)
+            t0 = time.time()
+            v = server.append(batch, classes=list(yb))
+            msg = f"append #{v}: +{len(batch)} rows ({time.time()-t0:.2f}s)"
+            if args.theta is not None:
+                msg += f", frequent set -> {len(server.frequent)}"
+            print(msg)
+        for b in range(args.batch):
+            client = f"client-{(rnd * args.batch + b) % args.clients}"
+            picks = rng.integers(0, len(pool), args.targets_per_query)
+            server.submit(client, [pool[i] for i in picks])
+            n_queries += args.targets_per_query
+        t0 = time.time()
+        server.flush()
+        t_serve += time.time() - t0
+
+    us_q = 1e6 * t_serve / max(1, n_queries)
+    print(f"served {n_queries} queries in {args.rounds} flushes: "
+          f"{us_q:.1f} us/query, {n_queries / max(t_serve, 1e-9):,.0f} q/s")
+    s = server.stats()
+    cache = s["cache"]
+    cache_msg = ("cache off" if cache is None else
+                 f"cache hit rate {cache['hit_rate']:.2f} "
+                 f"({cache['hits']} hits)")
+    print(f"batcher deduped {s['batcher']['deduped']}/"
+          f"{s['batcher']['queries']} queries; {cache_msg}; "
+          f"{s['store']['kernel_launches']} kernel launches")
+
+    if args.verify:
+        from ..mining import DenseDB, encode_targets
+        from ..kernels.itemset_count import itemset_counts
+        import jax.numpy as jnp
+
+        # rebuild the full history exactly as served
+        all_tx = [list(t) for t in tx]
+        all_y = list(y)
+        for rnd in sorted(append_at):
+            batch, yb = bernoulli_db(args.append_rows, args.items, args.p_x,
+                                     args.p_y, args.seed + 100 + rnd)
+            all_tx += [list(t) for t in batch]
+            all_y += list(yb)
+        ddb = DenseDB.encode(all_tx, classes=all_y,
+                             n_classes=server.store.n_classes)
+        keys = [k for k in pool if all(a in ddb.vocab for a in k)]
+        got = server.query(keys)
+        want = np.asarray(itemset_counts(
+            ddb.bits, jnp.asarray(encode_targets(keys, ddb.vocab)),
+            ddb.weights))
+        assert (got == want).all(), "served counts != fresh dense"
+        print(f"verified {len(keys)} keys bit-identical to a fresh dense "
+              f"encode at v{server.store.version}")
+
+
+if __name__ == "__main__":
+    main()

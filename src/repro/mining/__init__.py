@@ -2,7 +2,8 @@
 # adaptation): bitmap encoding, TIS level scheduling, dense counting engine,
 # the streaming out-of-core engine, and the shard_map-distributed runtime.
 from .encode import (ItemVocab, class_weights, dedup_rows, decode_row,
-                     encode_bitmap, encode_targets, project_columns)
+                     encode_bitmap, encode_targets, extend_vocab, pad_words,
+                     project_columns)
 from .dense import (DenseDB, DenseMRAResult, dense_gfp_counts,
                     dense_mine_frequent, minority_report_dense)
 from .plan import (TISSchedule, build_schedule, choose_chunk_rows, live_items,

@@ -101,6 +101,15 @@ class DenseDB:
         return DenseDB(vocab=vocab, bits=jnp.asarray(ub), weights=jnp.asarray(uw),
                        n_rows=len(transactions), n_classes=n_classes)
 
+    @staticmethod
+    def from_arrays(vocab: ItemVocab, bits, weights, n_rows: int,
+                    n_classes: int) -> "DenseDB":
+        """Wrap already-encoded/deduped arrays (serving-store residency hook):
+        uploads host arrays to device without re-encoding."""
+        return DenseDB(vocab=vocab, bits=jnp.asarray(bits),
+                       weights=jnp.asarray(weights), n_rows=n_rows,
+                       n_classes=n_classes)
+
     def project(self, keep_items: Sequence[Item]) -> "DenseDB":
         """Column projection + re-dedup (GFP data reduction, dense form)."""
         bits_np = np.asarray(self.bits)

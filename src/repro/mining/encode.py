@@ -158,6 +158,45 @@ def project_columns(
     return out, sub
 
 
+def pad_words(bits: np.ndarray, n_words: int) -> np.ndarray:
+    """Zero-extend packed rows (N, W) -> (N, n_words).
+
+    A tail-extended vocab (``extend_vocab``) only APPENDS bit columns, so rows
+    encoded under the old vocab stay valid at the new width with zero bits in
+    the new columns — this is the re-encode-free append path of the serving
+    store."""
+    w = bits.shape[1]
+    if w == n_words:
+        return bits
+    if w > n_words:
+        raise ValueError(f"cannot shrink packed rows from {w} to {n_words} words")
+    out = np.zeros((bits.shape[0], n_words), dtype=np.uint32)
+    out[:, :w] = bits
+    return out
+
+
+def extend_vocab(
+    transactions: Sequence[Sequence[Item]],
+    vocab: ItemVocab,
+) -> ItemVocab:
+    """Tail-extend ``vocab`` with items unseen so far (incremental appends).
+
+    Existing items keep their bit columns (already-encoded rows stay valid —
+    see ``pad_words``); new items are appended batch-frequency-descending,
+    mirroring the ``IncrementalMiner`` tail extension of its ``ItemOrder``.
+    Returns ``vocab`` itself when the batch introduces nothing new.
+    """
+    counts: Dict[Item, int] = {}
+    for t in transactions:
+        for a in set(t):
+            if a not in vocab:
+                counts[a] = counts.get(a, 0) + 1
+    if not counts:
+        return vocab
+    new = sorted(counts, key=lambda a: (-counts[a], repr(a)))
+    return ItemVocab(vocab.items + tuple(new))
+
+
 def decode_row(row: np.ndarray, vocab: ItemVocab) -> List[Item]:
     """Inverse of encode for tests/debug."""
     out: List[Item] = []

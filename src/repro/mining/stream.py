@@ -185,6 +185,17 @@ class StreamingDB:
                            n_rows=db.n_rows, n_classes=db.n_classes,
                            chunk_rows=chunk_rows)
 
+    @staticmethod
+    def from_arrays(vocab: ItemVocab, bits: np.ndarray, weights: np.ndarray,
+                    n_rows: int, n_classes: int,
+                    chunk_rows: Optional[int] = None) -> "StreamingDB":
+        """Wrap already-encoded/deduped host arrays (serving-store hook)."""
+        if chunk_rows is None:
+            chunk_rows = choose_chunk_rows(bits.shape[1], weights.shape[1])
+        return StreamingDB(vocab=vocab, bits=np.asarray(bits),
+                           weights=np.asarray(weights), n_rows=n_rows,
+                           n_classes=n_classes, chunk_rows=chunk_rows)
+
     def project(self, keep_items: Sequence[Item]) -> "StreamingDB":
         """Column projection + re-dedup (GFP data reduction, host-side)."""
         proj, sub = project_columns(self.bits, self.vocab, keep_items)

@@ -1,0 +1,16 @@
+# Online count-serving subsystem: a versioned resident encoded DB answering
+# micro-batched itemset-count queries (the paper's "count of a given large
+# list of itemsets" contract as a serving workload), with an
+# (itemset, version)-keyed LRU result cache and §5.2 incremental re-mining.
+from .batcher import (BatchPlan, MicroBatcher, QueryRequest, build_masks,
+                      canonical_itemset)
+from .cache import CountCache
+from .service import (CountServer, MiningRefreshError,
+                      versioned_mine_frequent)
+from .store import VersionedDB
+
+__all__ = [
+    "BatchPlan", "MicroBatcher", "QueryRequest", "build_masks",
+    "canonical_itemset", "CountCache", "CountServer", "MiningRefreshError",
+    "versioned_mine_frequent", "VersionedDB",
+]

@@ -1,0 +1,136 @@
+"""Micro-batching query planner — many small requests, one kernel launch.
+
+Every counting launch sweeps the whole resident bitmap regardless of how many
+targets ride along (up to ``block_k`` per K-block), so per-query launches waste
+almost the entire sweep.  The batcher coalesces the queries of many clients
+into one padded (K, W) target block:
+
+  * itemsets are canonicalized (sorted, deduped) so identical targets from
+    different clients collapse to ONE mask row — cross-client dedup;
+  * the block is zero-padded up to a ``block_k`` multiple so the kernel grid
+    is full and one compiled executable serves every batch shape bucket;
+  * after the launch, the (K, C) result rows are scattered back per request
+    in each request's original submission order.
+
+The batcher is pure planning (host, numpy): the device pass and the result
+cache live in ``serve.service`` / ``serve.cache``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Hashable, List, Sequence, Tuple
+
+import numpy as np
+
+from ..mining.encode import ItemVocab, encode_targets
+
+Item = Hashable
+Key = Tuple[Item, ...]
+
+
+def canonical_itemset(itemset: Sequence[Item]) -> Key:
+    """Deterministic identity of an itemset query: sorted, duplicate-free.
+    The cache key half and the cross-client dedup key."""
+    return tuple(sorted(set(itemset), key=repr))
+
+
+@dataclass
+class QueryRequest:
+    """One client's submitted query list (keys already canonical)."""
+    request_id: int
+    client_id: str
+    keys: List[Key]
+
+
+@dataclass
+class BatchPlan:
+    """A drained batch: unique targets + the per-request scatter map."""
+    unique_keys: List[Key]
+    rows: Dict[Key, int]                  # key -> row in unique_keys
+    requests: List[QueryRequest] = field(default_factory=list)
+
+    @property
+    def n_queries(self) -> int:
+        return sum(len(r.keys) for r in self.requests)
+
+
+class MicroBatcher:
+    """Accumulates (client_id, itemsets) requests; ``take()`` drains them into
+    one deduplicated :class:`BatchPlan`."""
+
+    def __init__(self, block_k: int = 256):
+        if block_k <= 0:
+            raise ValueError("block_k must be positive")
+        self.block_k = block_k
+        self._pending: List[QueryRequest] = []
+        self._next_id = 0
+        self.n_requests = 0
+        self.n_queries = 0
+        self.n_deduped = 0     # queries answered by another request's mask row
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def submit(self, client_id: str, itemsets: Sequence[Sequence[Item]]) -> int:
+        """Queue one request; returns its ticket (the ``flush()`` result key)."""
+        rid = self._next_id
+        self._next_id += 1
+        keys = [canonical_itemset(s) for s in itemsets]
+        self._pending.append(QueryRequest(rid, client_id, keys))
+        self.n_requests += 1
+        self.n_queries += len(keys)
+        return rid
+
+    def take(self) -> BatchPlan:
+        """Drain pending requests into one plan (unique keys in first-seen
+        order — deterministic, so repeated workloads build identical blocks)."""
+        rows: Dict[Key, int] = {}
+        unique: List[Key] = []
+        for req in self._pending:
+            for key in req.keys:
+                if key not in rows:
+                    rows[key] = len(unique)
+                    unique.append(key)
+                else:
+                    self.n_deduped += 1
+        plan = BatchPlan(unique_keys=unique, rows=rows,
+                         requests=self._pending)
+        self._pending = []
+        return plan
+
+    def restore(self, requests: List[QueryRequest]) -> None:
+        """Re-queue a taken plan's requests (failed flush): tickets stay
+        answerable by a retry.  Requests go back at the FRONT in their
+        original order; submit-time stats are untouched (a re-take recounts
+        dedups, which is informational only)."""
+        self._pending = list(requests) + self._pending
+
+    def stats(self) -> dict:
+        return {"requests": self.n_requests, "queries": self.n_queries,
+                "deduped": self.n_deduped, "pending": self.pending,
+                "block_k": self.block_k}
+
+
+def build_masks(
+    keys: Sequence[Key],
+    vocab: ItemVocab,
+    block_k: int = 256,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Encode unique targets into a (K_pad, W) block, K_pad a ``block_k``
+    multiple (zero rows pad the tail; their counts are sliced off).
+
+    Returns ``(masks, known)`` where ``known[i]`` is False for keys naming
+    items outside the vocab: those get an all-zero mask row, and since an
+    empty mask is contained in EVERY row, the caller must zero their counts
+    (the exact count of a never-seen item's itemset is 0).
+    """
+    k = len(keys)
+    k_pad = max(block_k, ((k + block_k - 1) // block_k) * block_k)
+    masks = np.zeros((k_pad, vocab.n_words), np.uint32)
+    known = np.array([all(a in vocab for a in key) for key in keys], bool) \
+        if k else np.zeros(0, bool)
+    idx = np.flatnonzero(known)
+    if idx.size:
+        masks[idx] = encode_targets([keys[i] for i in idx], vocab)
+    return masks, known

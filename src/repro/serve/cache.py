@@ -1,0 +1,70 @@
+"""LRU result cache for served counts, keyed on (canonical itemset, version).
+
+The DB version is half the key, so an ``append`` (which bumps the store's
+version) invalidates every cached row BY CONSTRUCTION — a stale hit is
+impossible, no flush coordination needed.  Stale-version entries age out of
+the LRU naturally; ``purge_stale`` drops them eagerly after an append when
+memory matters more than the O(capacity) sweep.
+
+A hit returns a defensive copy: cached rows are immutable serving results,
+never views into a caller's buffer.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Optional, Tuple
+
+import numpy as np
+
+Key = Tuple[Hashable, ...]
+
+
+class CountCache:
+    """Bounded LRU: (itemset key, version) -> (C,) int32 count row."""
+
+    def __init__(self, capacity: int = 65536):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        self._d: "OrderedDict[Tuple[Key, int], np.ndarray]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key: Key, version: int) -> Optional[np.ndarray]:
+        entry = self._d.get((key, version))
+        if entry is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end((key, version))
+        self.hits += 1
+        return entry.copy()
+
+    def put(self, key: Key, version: int, counts: np.ndarray) -> None:
+        k = (key, version)
+        self._d[k] = np.array(counts, np.int32, copy=True)
+        self._d.move_to_end(k)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def purge_stale(self, current_version: int) -> int:
+        """Eagerly drop rows from superseded versions; returns how many."""
+        stale = [k for k in self._d if k[1] != current_version]
+        for k in stale:
+            del self._d[k]
+        return len(stale)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": round(self.hit_rate, 4)}

@@ -1,0 +1,264 @@
+"""The GFP count server: synchronous micro-batched count serving.
+
+``CountServer`` ties the serving subsystem together:
+
+  * :class:`~repro.serve.store.VersionedDB` — the resident encoded DB
+    (device-dense or host-streaming by size) with versioned appends;
+  * :class:`~repro.serve.batcher.MicroBatcher` — ``submit()`` queues
+    (client_id, itemsets) requests, ``flush()`` answers them all with ONE
+    composed counting pass (cross-client deduped, block_k-padded);
+  * :class:`~repro.serve.cache.CountCache` — (itemset, version)-keyed LRU so
+    repeated hot queries skip the device entirely; ``append`` invalidates by
+    bumping the version.
+
+Served counts are EXACT: every row equals a fresh ``dense_gfp_counts`` /
+brute-force run over the full transaction history at the same version.
+
+Incremental re-mining (paper §5.2): ``mine(theta)`` bootstraps the frequent
+set on the resident engine; after each ``append`` the server re-establishes
+it from the pigeonhole candidate set (``incremental_candidates`` — the same
+pure function the host ``IncrementalMiner`` uses), recounting the candidates
+through the dense/streaming engine in one guided batch instead of host
+FP-tree walks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.fpgrowth import mine_frequent
+from ..core.incremental import ceil_count, incremental_candidates
+from .batcher import MicroBatcher, build_masks, canonical_itemset
+from .cache import CountCache
+from .store import VersionedDB
+
+Item = Hashable
+Key = Tuple[Item, ...]
+
+
+class MiningRefreshError(RuntimeError):
+    """Raised by ``CountServer.append`` when the batch WAS committed to the
+    store (``version`` is the new version) but the §5.2 frequent-set refresh
+    failed and incremental maintenance was disarmed.  Distinguishes
+    'committed, re-mine needed' from a rejected append (which raises
+    ``ValueError``/``OverflowError`` and leaves no trace) — do NOT retry the
+    append, the rows would be double-counted."""
+
+    def __init__(self, version: int, cause: BaseException):
+        super().__init__(
+            f"batch committed at version {version}, but the frequent-set "
+            f"refresh failed ({cause!r}); incremental mining disarmed — "
+            "call mine() to re-arm, do not retry the append")
+        self.version = version
+
+
+def versioned_mine_frequent(
+    store: VersionedDB,
+    min_count: float,
+    *,
+    class_column: Optional[int] = None,
+    max_len: int = 0,
+) -> Dict[Key, int]:
+    """Level-synchronous exact mining over a :class:`VersionedDB` — the same
+    contract as ``dense_mine_frequent`` but counting through the store's
+    composed base+delta sweep, so it is correct mid-append without compaction."""
+    from ..core.apriori import apriori_gen
+
+    def _absorb(itemsets, rows):
+        frequent = set()
+        for itemset, row in zip(itemsets, rows):
+            cnt = (int(row.sum()) if class_column is None
+                   else int(row[class_column]))
+            if cnt >= min_count:
+                frequent.add(frozenset(itemset))
+                out[itemset] = cnt
+        return frequent
+
+    out: Dict[Key, int] = {}
+    singles = [(a,) for a in store.vocab.items]
+    frequent = _absorb(singles, store.counts(singles)) if singles else set()
+    k = 1
+    while frequent and (max_len == 0 or k < max_len):
+        cands = apriori_gen(frequent, k)
+        if not cands:
+            break
+        itemsets = [tuple(sorted(s, key=repr)) for s in cands]
+        frequent = _absorb(itemsets, store.counts(itemsets))
+        k += 1
+    return out
+
+
+class CountServer:
+    """Synchronous driver loop: ``submit`` / ``flush`` / ``append`` / ``stats``."""
+
+    def __init__(
+        self,
+        transactions: Sequence[Sequence[Item]] = (),
+        classes: Optional[Sequence[int]] = None,
+        n_classes: Optional[int] = None,
+        *,
+        use_kernel: bool = True,
+        streaming: Optional[bool] = None,
+        chunk_rows: Optional[int] = None,
+        cache_size: int = 65536,
+        cache: bool = True,
+        block_k: int = 256,
+        merge_ratio: float = 0.25,
+    ):
+        self.store = VersionedDB(
+            transactions, classes=classes, n_classes=n_classes,
+            use_kernel=use_kernel, streaming=streaming, chunk_rows=chunk_rows,
+            merge_ratio=merge_ratio)
+        self.batcher = MicroBatcher(block_k=block_k)
+        self.cache: Optional[CountCache] = \
+            CountCache(cache_size) if cache else None
+        self.n_flushes = 0
+        self.n_queries_served = 0
+        self._theta: Optional[float] = None
+        self._frequent: Dict[Key, int] = {}
+
+    # -- query path -----------------------------------------------------------
+    def submit(self, client_id: str,
+               itemsets: Sequence[Sequence[Item]]) -> int:
+        """Queue one client request; returns the ticket ``flush()`` keys on."""
+        return self.batcher.submit(client_id, itemsets)
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Answer every pending request with one composed counting pass.
+
+        Returns {ticket -> (len(itemsets), C) int32}, rows in each request's
+        submission order.  Unique uncached targets are counted in ONE
+        block_k-padded launch per resident segment; cached targets (same
+        itemset, same version) never touch the device.
+        """
+        plan = self.batcher.take()
+        if not plan.requests:
+            return {}
+        try:
+            resolved = self._resolve(plan.unique_keys)
+        except BaseException:
+            self.batcher.restore(plan.requests)  # failed flush is retryable
+            raise
+        out: Dict[int, np.ndarray] = {}
+        for req in plan.requests:
+            block = (np.stack([resolved[k] for k in req.keys])
+                     if req.keys
+                     else np.zeros((0, self.store.n_classes), np.int32))
+            out[req.request_id] = block.astype(np.int32, copy=False)
+        self.n_flushes += 1
+        self.n_queries_served += plan.n_queries
+        return out
+
+    def _resolve(self, keys: Sequence[Key]) -> Dict[Key, np.ndarray]:
+        """{key -> (C,) counts} at the CURRENT version: cache hits first, one
+        block_k-padded composed counting pass for the rest."""
+        version = self.store.version
+        resolved: Dict[Key, np.ndarray] = {}
+        missing: List[Key] = []
+        for key in keys:
+            hit = self.cache.get(key, version) if self.cache is not None \
+                else None
+            if hit is not None:
+                resolved[key] = hit
+            else:
+                missing.append(key)
+        if missing:
+            masks, known = build_masks(missing, self.store.vocab,
+                                       self.batcher.block_k)
+            rows = self.store.counts_masks(
+                masks, block_k=self.batcher.block_k)[:len(missing)]
+            rows[~known] = 0     # unknown-item targets count exactly 0
+            for key, row in zip(missing, rows):
+                resolved[key] = row
+                if self.cache is not None:
+                    self.cache.put(key, version, row)
+        return resolved
+
+    def query(self, itemsets: Sequence[Sequence[Item]],
+              client_id: str = "_local") -> np.ndarray:
+        """Answer one request immediately, WITHOUT draining the batcher:
+        other clients' pending requests stay queued and are answered by the
+        next ``flush()`` at whatever version is current then — an interleaved
+        ``query()`` can neither orphan their tickets nor freeze their counts
+        at an older version."""
+        keys = [canonical_itemset(s) for s in itemsets]
+        resolved = self._resolve(list(dict.fromkeys(keys)))
+        self.n_queries_served += len(keys)
+        if not keys:
+            return np.zeros((0, self.store.n_classes), np.int32)
+        return np.stack([resolved[k] for k in keys]).astype(np.int32,
+                                                            copy=False)
+
+    # -- growth path ----------------------------------------------------------
+    def append(self, transactions: Sequence[Sequence[Item]],
+               classes: Optional[Sequence[int]] = None) -> int:
+        """Fold a new batch into the resident DB (version bump ⇒ cache
+        invalidation) and, if mining is active, refresh the frequent set via
+        the §5.2 guided recount on the engine."""
+        transactions = [list(t) for t in transactions]
+        old_version = self.store.version
+        version = self.store.append(transactions, classes=classes)
+        if version != old_version and self.cache is not None:
+            self.cache.purge_stale(version)   # every old-version row is dead
+        if self._theta is not None and transactions:
+            try:
+                self._refresh_frequent(transactions)
+            except Exception as e:
+                # §5.2 completeness needs the PREVIOUS exact frequent set;
+                # after a failed refresh that baseline is lost for the new
+                # version — serving the stale set would be silently wrong,
+                # so disarm and require a fresh mine().  The batch itself IS
+                # committed; MiningRefreshError tells the caller not to retry.
+                self._theta = None
+                self._frequent = {}
+                raise MiningRefreshError(version, e) from e
+        return version
+
+    def mine(self, theta: float) -> Dict[Key, int]:
+        """Bootstrap exact frequent-itemset mining at relative threshold
+        ``theta``; subsequent ``append`` calls maintain it incrementally."""
+        if not (0.0 < theta <= 1.0):
+            raise ValueError("theta in (0, 1]")
+        frequent = versioned_mine_frequent(
+            self.store, ceil_count(theta * self.store.n_rows))
+        # commit only after the mine succeeds: a failed mine must not arm
+        # incremental maintenance over an empty/stale baseline
+        self._theta, self._frequent = theta, frequent
+        return dict(frequent)
+
+    def _refresh_frequent(self, increment: List[List[Item]]) -> None:
+        # Pigeonhole candidates (complete: combined-frequent ⇒ frequent in the
+        # old data or in the increment), then ONE guided engine recount of all
+        # candidates over the full resident history — no host FP-tree walk.
+        inc_frequent = mine_frequent(
+            increment, ceil_count(self._theta * len(increment)))
+        previously, newly = incremental_candidates(self._frequent,
+                                                   inc_frequent)
+        candidates = previously + newly
+        if not candidates:
+            self._frequent = {}
+            return
+        rows = self.store.counts(candidates).sum(axis=1)
+        min_total = ceil_count(self._theta * self.store.n_rows)
+        self._frequent = {k: int(c) for k, c in zip(candidates, rows)
+                          if int(c) >= min_total}
+
+    @property
+    def frequent(self) -> Dict[Key, int]:
+        if self._theta is None:
+            raise RuntimeError("call mine() first")
+        return dict(self._frequent)
+
+    # -- introspection --------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "store": self.store.stats(),
+            "batcher": self.batcher.stats(),
+            "cache": self.cache.stats() if self.cache is not None else None,
+            "flushes": self.n_flushes,
+            "queries_served": self.n_queries_served,
+            "mining_theta": self._theta,
+            "frequent_itemsets": (len(self._frequent)
+                                  if self._theta is not None else None),
+        }

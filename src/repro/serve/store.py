@@ -1,0 +1,290 @@
+"""Versioned resident encoded DB — the serving-side state of the count server.
+
+The paper frames multitude-targeted mining as answering "the count of a given
+large list of itemsets" — a query workload.  ``VersionedDB`` keeps one encoded
+bitmap RESIDENT between queries (the serving analogue of the encoded-DB
+technique of Danessh et al. 2010) instead of re-encoding per call:
+
+  * the **base** segment is a device ``DenseDB`` or host ``StreamingDB``,
+    selected by encoded size (same threshold discipline as the mining stack);
+  * ``append(transactions)`` encodes a new batch under a TAIL-EXTENDED vocab
+    (existing bit columns never move, so resident rows stay valid without
+    re-encoding), dedups it against the current tail **delta** segment, and
+    bumps the monotonically increasing ``version``;
+  * the delta is folded into the base (full re-dedup + residency reselection)
+    once it grows past ``merge_ratio`` of the base — until then every counting
+    sweep COMPOSES base + delta: counts are int32 sums, so the composition is
+    bit-identical to a fresh encode of the concatenated history;
+  * ``counts`` / ``counts_masks`` answer a (K, W) target block with (K, C)
+    per-class counts, exact at the current version.
+
+``version`` is the cache key half of the serving cache (``serve.cache``): any
+append invalidates by construction, and pure compaction does NOT bump the
+version because it cannot change any count.
+"""
+from __future__ import annotations
+
+from typing import Hashable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.itemset_count import itemset_counts
+from ..mining.dense import DenseDB
+from ..mining.encode import (ItemVocab, class_weights, dedup_rows,
+                             encode_bitmap, extend_vocab, pad_words)
+from ..mining.stream import (DEFAULT_STREAM_THRESHOLD_BYTES, StreamingDB)
+
+Item = Hashable
+
+
+class VersionedDB:
+    """Resident encoded bitmap + vocab with versioned incremental appends."""
+
+    def __init__(
+        self,
+        transactions: Sequence[Sequence[Item]] = (),
+        classes: Optional[Sequence[int]] = None,
+        n_classes: Optional[int] = None,
+        vocab: Optional[ItemVocab] = None,
+        *,
+        use_kernel: bool = True,
+        streaming: Optional[bool] = None,
+        chunk_rows: Optional[int] = None,
+        stream_threshold_bytes: int = DEFAULT_STREAM_THRESHOLD_BYTES,
+        merge_ratio: float = 0.25,
+    ):
+        if classes is not None and n_classes is None:
+            n_classes = int(max(classes)) + 1 if len(classes) else 1
+        self.n_classes = n_classes or 1
+        self.use_kernel = use_kernel
+        self.chunk_rows = chunk_rows
+        self.merge_ratio = merge_ratio
+        self._streaming = streaming
+        self._stream_threshold = stream_threshold_bytes
+        self.version = 0
+        self.n_rows = 0
+        self.kernel_launches = 0
+        self.n_appends = 0
+        self.n_compactions = 0
+        self._delta_bits: Optional[np.ndarray] = None   # (D, W) uint32, host
+        self._delta_weights: Optional[np.ndarray] = None  # (D, C) int32
+        self._delta_device = None   # (bits, weights) device mirror, lazy
+        self._class_totals = np.zeros(self.n_classes, np.int64)
+
+        transactions = [list(t) for t in transactions]
+        self.vocab = vocab if vocab is not None else \
+            ItemVocab.from_transactions(transactions)
+        ub, uw = self._encode_batch(transactions, classes)
+        self._class_totals = self._guard_totals(
+            self._class_totals + uw.sum(axis=0, dtype=np.int64))
+        self.n_rows = len(transactions)
+        self.base = self._make_base(ub, uw)
+
+    @staticmethod
+    def _guard_totals(totals: np.ndarray) -> np.ndarray:
+        # largest possible count = per-class weight-column total; the int32
+        # accumulator must hold it (construction AND every append)
+        if np.any(totals > np.iinfo(np.int32).max):
+            raise OverflowError(
+                "per-class row totals would exceed int32; served counts "
+                "could wrap — shard the store instead")
+        return totals
+
+    # -- encode ---------------------------------------------------------------
+    def _encode_batch(self, transactions, classes, vocab=None):
+        if classes is None or len(transactions) == 0:
+            if self.n_classes != 1 and len(transactions):
+                # ones in EVERY class column would count each row per class
+                raise ValueError(
+                    "classes are required on a multi-class store "
+                    f"(n_classes={self.n_classes})")
+            w = np.ones((len(transactions), self.n_classes), np.int32)
+        else:
+            if len(classes) != len(transactions):
+                raise ValueError("classes length != transactions length")
+            w = class_weights(classes, self.n_classes)
+        bits = encode_bitmap(transactions,
+                             self.vocab if vocab is None else vocab)
+        return dedup_rows(bits, w)
+
+    def _make_base(self, bits: np.ndarray, weights: np.ndarray):
+        stream = self._streaming
+        if stream is None:
+            # explicit chunk_rows opts in, mirroring _resolve_streaming in
+            # the mining stack; otherwise select by encoded size
+            stream = (self.chunk_rows is not None
+                      or (bits.nbytes + weights.nbytes)
+                      > self._stream_threshold)
+        if stream:
+            return StreamingDB.from_arrays(self.vocab, bits, weights,
+                                           self.n_rows, self.n_classes,
+                                           chunk_rows=self.chunk_rows)
+        return DenseDB.from_arrays(self.vocab, bits, weights,
+                                   self.n_rows, self.n_classes)
+
+    # -- introspection --------------------------------------------------------
+    @property
+    def resident(self) -> str:
+        return "streaming" if isinstance(self.base, StreamingDB) else "dense"
+
+    @property
+    def base_rows(self) -> int:
+        return int(self.base.bits.shape[0])
+
+    @property
+    def delta_rows(self) -> int:
+        return 0 if self._delta_bits is None else int(self._delta_bits.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        base = int(np.asarray(self.base.bits).nbytes
+                   + np.asarray(self.base.weights).nbytes)
+        if self._delta_bits is not None:
+            base += self._delta_bits.nbytes + self._delta_weights.nbytes
+        return base
+
+    def stats(self) -> dict:
+        return {
+            "version": self.version, "n_rows": self.n_rows,
+            "n_classes": self.n_classes, "vocab_size": self.vocab.size,
+            "resident": self.resident, "base_rows": self.base_rows,
+            "delta_rows": self.delta_rows, "nbytes": self.nbytes,
+            "kernel_launches": self.kernel_launches,
+            "appends": self.n_appends, "compactions": self.n_compactions,
+        }
+
+    # -- append ---------------------------------------------------------------
+    def append(
+        self,
+        transactions: Sequence[Sequence[Item]],
+        classes: Optional[Sequence[int]] = None,
+    ) -> int:
+        """Fold a new batch in; returns the new (bumped) ``version``.
+
+        The batch is encoded under the tail-extended vocab, deduped against
+        the current delta tail, and kept as the delta segment until the
+        ``merge_ratio`` compaction threshold folds it into the base.
+        An empty batch is a no-op (version unchanged: no count can differ).
+        """
+        transactions = [list(t) for t in transactions]
+        if not transactions:
+            return self.version
+        # encode + validate BEFORE touching any store state: a rejected batch
+        # must leave no trace (no vocab tail, no totals, no version bump)
+        vocab = extend_vocab(transactions, self.vocab)
+        ub, uw = self._encode_batch(transactions, classes, vocab)
+        totals = self._guard_totals(
+            self._class_totals + uw.sum(axis=0, dtype=np.int64))
+        self.vocab = vocab
+        self._class_totals = totals
+
+        w_now = self.vocab.n_words
+        if self._delta_bits is not None:
+            # dedup against the tail: one growing delta segment
+            ub, uw = dedup_rows(
+                np.concatenate([pad_words(self._delta_bits, w_now), ub]),
+                np.concatenate([self._delta_weights, uw]))
+        self._delta_bits, self._delta_weights = ub, uw
+        self._delta_device = None
+        self.n_rows += len(transactions)
+        self.n_appends += 1
+        self.version += 1
+        if self.delta_rows > self.merge_ratio * max(1, self.base_rows):
+            self.compact()
+        return self.version
+
+    def compact(self) -> None:
+        """Fold the delta into the base: full re-dedup at the current vocab
+        width, then residency reselection (dense vs streaming) by size.
+        Pure compaction — counts (and therefore ``version``) are unchanged."""
+        w_now = self.vocab.n_words
+        base_bits = pad_words(np.asarray(self.base.bits), w_now)
+        base_w = np.asarray(self.base.weights)
+        had_delta = self._delta_bits is not None
+        if had_delta:
+            base_bits = np.concatenate([base_bits, self._delta_bits])
+            base_w = np.concatenate([base_w, self._delta_weights])
+        ub, uw = dedup_rows(base_bits, base_w)
+        # build the new base BEFORE dropping the delta: a failure here (e.g.
+        # device OOM at residency reselection) must leave the composed
+        # base+delta counts intact, not silently lose the delta rows
+        self.base = self._make_base(ub, uw)
+        if had_delta:
+            self._delta_bits = self._delta_weights = None
+            self._delta_device = None
+            self.n_compactions += 1
+
+    # -- counting -------------------------------------------------------------
+    def _narrow(self, masks: np.ndarray, w_seg: int):
+        """Truncate (K, W_now) masks to a segment's width.  Targets with bits
+        beyond the segment width reference items the segment predates — their
+        count over that segment is exactly 0 (returned as ``oob``)."""
+        if masks.shape[1] <= w_seg:
+            return masks, None
+        oob = masks[:, w_seg:].any(axis=1)
+        return np.ascontiguousarray(masks[:, :w_seg]), oob
+
+    @staticmethod
+    def _zero_oob(got: np.ndarray, oob: Optional[np.ndarray]) -> np.ndarray:
+        if oob is None:
+            return got
+        got = np.array(got)   # np.asarray(device array) can be read-only
+        got[oob] = 0
+        return got
+
+    def counts_masks(self, masks: np.ndarray,
+                     block_k: Optional[int] = None) -> np.ndarray:
+        """(K, C) exact per-class counts for a (K, W_now) target block,
+        composed over base + delta segments (bit-identical to a fresh encode
+        of the full history: int32 sums commute with row partitioning).
+        ``block_k`` forwards the caller's K-block size to the kernel so a
+        block that was padded for it launches as one K-block."""
+        k = int(masks.shape[0])
+        if k == 0:
+            return np.zeros((0, self.n_classes), np.int32)
+        bk = {} if block_k is None else {"block_k": block_k}
+        total = np.zeros((k, self.n_classes), np.int32)
+        # base segment
+        if self.base_rows:
+            narrow, oob = self._narrow(masks, int(self.base.bits.shape[1]))
+            if isinstance(self.base, StreamingDB):
+                got = np.asarray(self.base.counts(
+                    narrow, use_kernel=self.use_kernel, **bk))
+                self.kernel_launches += self.base.n_chunks
+            else:
+                got = np.asarray(itemset_counts(
+                    self.base.bits, jnp.asarray(narrow), self.base.weights,
+                    use_kernel=self.use_kernel, **bk))
+                self.kernel_launches += 1
+            total += self._zero_oob(got, oob)
+        # delta segment (bounded by merge_ratio * base_rows: one launch);
+        # its device mirror persists between appends — queries don't pay a
+        # fresh H2D upload of identical delta bytes on every flush
+        if self._delta_bits is not None:
+            narrow, oob = self._narrow(masks, self._delta_bits.shape[1])
+            if self._delta_device is None:
+                self._delta_device = (jnp.asarray(self._delta_bits),
+                                      jnp.asarray(self._delta_weights))
+            d_bits, d_weights = self._delta_device
+            got = np.asarray(itemset_counts(
+                d_bits, jnp.asarray(narrow), d_weights,
+                use_kernel=self.use_kernel, **bk))
+            self.kernel_launches += 1
+            total += self._zero_oob(got, oob)
+        return total
+
+    def counts(self, itemsets: Sequence[Sequence[Item]]) -> np.ndarray:
+        """(K, C) counts for raw itemsets.  Itemsets naming items absent from
+        the vocab count 0 (the paper's note: such targets never appear in the
+        FP-tree), matching ``dense_gfp_counts``.  One unknown-target contract,
+        shared with the flush path: ``build_masks`` + zeroing."""
+        from .batcher import build_masks
+
+        if not len(itemsets):
+            return np.zeros((0, self.n_classes), np.int32)
+        masks, known = build_masks([tuple(s) for s in itemsets], self.vocab,
+                                   block_k=1)
+        out = self.counts_masks(masks)[:len(itemsets)]
+        out[~known] = 0
+        return out

@@ -1,0 +1,487 @@
+"""Serving subsystem: versioned resident DB exactness across appends, batcher
+cross-client dedup, (itemset, version) cache invalidation, engine-backed
+incremental re-mining parity with the host miner, and the served-counts ==
+dense_gfp_counts acceptance contract."""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ItemOrder, TISTree, brute_force_counts, mine_frequent
+from repro.core.incremental import IncrementalMiner, incremental_candidates
+from repro.kernels.itemset_count import itemset_counts
+from repro.mining import (DenseDB, StreamingDB, dense_gfp_counts,
+                          dense_mine_frequent, encode_targets, extend_vocab,
+                          pad_words, ItemVocab)
+from repro.serve import (CountCache, CountServer, MicroBatcher, VersionedDB,
+                         build_masks, canonical_itemset,
+                         versioned_mine_frequent)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _db(rng, rows, items, p=0.3):
+    return [[int(a) for a in range(items) if rng.random() < p]
+            for _ in range(rows)]
+
+
+def _fresh_counts(history, classes, n_classes, keys):
+    """Oracle: counts from a fresh dense encode of the full history."""
+    ddb = DenseDB.encode(history, classes=classes, n_classes=n_classes)
+    out = np.zeros((len(keys), n_classes), np.int32)
+    known = [i for i, k in enumerate(keys)
+             if all(a in ddb.vocab for a in k)]
+    if known:
+        masks = encode_targets([keys[i] for i in known], ddb.vocab)
+        got = np.asarray(itemset_counts(ddb.bits, jnp.asarray(masks),
+                                        ddb.weights))
+        out[np.array(known)] = got
+    return out
+
+
+# ------------------------------------------------------------ encode helpers
+def test_pad_words_and_extend_vocab():
+    bits = np.array([[1, 2], [3, 4]], np.uint32)
+    np.testing.assert_array_equal(pad_words(bits, 2), bits)
+    wide = pad_words(bits, 4)
+    assert wide.shape == (2, 4) and (wide[:, 2:] == 0).all()
+    np.testing.assert_array_equal(wide[:, :2], bits)
+    with pytest.raises(ValueError):
+        pad_words(bits, 1)
+
+    vocab = ItemVocab((5, 3, 1))
+    same = extend_vocab([[5], [3, 1]], vocab)
+    assert same is vocab                      # nothing new: same object
+    ext = extend_vocab([[5, 9], [9, 7], [9]], vocab)
+    assert ext.items[:3] == (5, 3, 1)         # existing columns keep positions
+    assert ext.items[3:] == (9, 7)            # new items batch-frequency desc
+
+
+# ------------------------------------------------------------- VersionedDB
+@pytest.mark.parametrize("merge_ratio", [0.25, 1e9])
+def test_versioned_db_append_exact_across_batches(merge_ratio):
+    """≥2 appends (incl. unseen items), delta-kept and compacted policies:
+    served counts stay bit-identical to a fresh encode of the history."""
+    rng = np.random.default_rng(0)
+    tx = _db(rng, 200, 10)
+    y = [int(rng.random() < 0.3) for _ in tx]
+    db = VersionedDB(tx, classes=y, n_classes=2, merge_ratio=merge_ratio)
+    assert db.version == 0 and db.n_rows == 200
+    history, classes = list(tx), list(y)
+    probes = [(0, 1), (2,), (3, 7, 9), (11,), (4, 12)]  # 11, 12 unseen so far
+    for step in range(1, 4):
+        batch = _db(rng, 60, 10 + step)       # widens the item universe
+        yb = [int(rng.random() < 0.3) for _ in batch]
+        assert db.append(batch, classes=yb) == step
+        history += batch
+        classes += yb
+        np.testing.assert_array_equal(
+            db.counts(probes), _fresh_counts(history, classes, 2, probes))
+    assert db.version == 3 and db.n_rows == len(history)
+    if merge_ratio > 1:
+        assert db.delta_rows > 0              # delta actually exercised
+    else:
+        assert db.n_compactions > 0
+    db.compact()                              # explicit fold: counts unchanged
+    assert db.delta_rows == 0 and db.version == 3
+    np.testing.assert_array_equal(
+        db.counts(probes), _fresh_counts(history, classes, 2, probes))
+
+
+@pytest.mark.parametrize("streaming", [False, True])
+def test_versioned_db_append_across_word_boundary(streaming):
+    """An uncompacted append that widens the bitmap past a 32-item word
+    boundary: masks are wider than the resident base, so the out-of-width
+    zeroing path runs on the device result (regression: read-only view)."""
+    rng = np.random.default_rng(9)
+    tx = _db(rng, 80, 40)                     # 40 items -> W=2 words
+    db = VersionedDB(tx, streaming=streaming, chunk_rows=16,
+                     merge_ratio=1e9)         # keep the narrow base resident
+    batch = [[int(a) for a in range(100, 125)] for _ in range(5)]  # W -> 3
+    db.append(batch)
+    assert db.vocab.n_words == 3
+    assert int(np.asarray(db.base.bits).shape[1]) == 2   # base left narrow
+    probes = [(0, 1), (104,), (0, 104), (39,)]
+    np.testing.assert_array_equal(
+        db.counts(probes), _fresh_counts(tx + batch, None, 1, probes))
+
+
+def test_versioned_db_empty_append_and_unknown_targets():
+    rng = np.random.default_rng(1)
+    tx = _db(rng, 50, 6)
+    db = VersionedDB(tx)
+    assert db.append([]) == 0                 # no-op: no count can change
+    got = db.counts([("never-seen",), (0, "never-seen")])
+    np.testing.assert_array_equal(got, np.zeros((2, 1), np.int32))
+
+
+def test_versioned_db_failed_compaction_preserves_delta(monkeypatch):
+    """compact() must not drop the delta when building the new base fails:
+    composed counts stay exact after the failure."""
+    rng = np.random.default_rng(14)
+    tx = _db(rng, 100, 8)
+    db = VersionedDB(tx, merge_ratio=1e9)
+    db.append(_db(rng, 30, 8))
+    assert db.delta_rows > 0
+    probes = [(0,), (1, 2)]
+    want = db.counts(probes)
+    monkeypatch.setattr(db, "_make_base",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("device OOM")))
+    with pytest.raises(RuntimeError, match="OOM"):
+        db.compact()
+    monkeypatch.undo()
+    assert db.delta_rows > 0                  # delta NOT lost
+    np.testing.assert_array_equal(db.counts(probes), want)
+    db.compact()                              # and a healthy retry works
+    assert db.delta_rows == 0
+    np.testing.assert_array_equal(db.counts(probes), want)
+
+
+def test_versioned_db_streaming_resident():
+    rng = np.random.default_rng(2)
+    tx = _db(rng, 150, 8)
+    dense = VersionedDB(tx)
+    stream = VersionedDB(tx, streaming=True, chunk_rows=16)
+    # explicit chunk_rows opts into streaming, like the mining stack
+    assert VersionedDB(tx, chunk_rows=16).resident == "streaming"
+    assert VersionedDB(tx, streaming=False, chunk_rows=16).resident == "dense"
+    assert dense.resident == "dense" and stream.resident == "streaming"
+    probes = [(0,), (1, 2), (3, 4, 5)]
+    np.testing.assert_array_equal(dense.counts(probes), stream.counts(probes))
+    # appends keep the streaming base exact too
+    batch = _db(rng, 40, 8)
+    dense.append(batch)
+    stream.append(batch)
+    np.testing.assert_array_equal(dense.counts(probes), stream.counts(probes))
+    assert stream.resident == "streaming"
+
+
+def test_versioned_db_multiclass_requires_classes():
+    """Classless rows on a multi-class store would count once PER class
+    column — must be rejected, mirroring DenseDB.encode's classes=None ⇒ C=1."""
+    rng = np.random.default_rng(10)
+    tx = _db(rng, 30, 6)
+    y = [int(rng.random() < 0.5) for _ in tx]
+    db = VersionedDB(tx, classes=y, n_classes=2)
+    vocab_before = db.vocab
+    with pytest.raises(ValueError, match="classes"):
+        db.append([[0, 1, "new-item"]])
+    with pytest.raises(ValueError, match="classes"):
+        VersionedDB(tx, n_classes=2)
+    # rejected append leaves NO trace: no version bump, no vocab tail
+    assert db.version == 0
+    assert db.vocab is vocab_before and "new-item" not in db.vocab
+    # single-class stores still take classless appends
+    db1 = VersionedDB(tx)
+    db1.append([[0, 1]])
+    assert int(db1.counts([(0, 1)])[0].sum()) == \
+        sum(1 for t in tx + [[0, 1]] if {0, 1} <= set(t))
+
+
+def test_versioned_db_append_overflow_guard():
+    db = VersionedDB([[0]], vocab=ItemVocab((0,)))
+    db._class_totals[:] = np.iinfo(np.int32).max - 1
+    with pytest.raises(OverflowError):
+        db.append([[0], [0]])
+    # same guard at construction (counts would wrap on the dense path)
+    with pytest.raises(OverflowError):
+        VersionedDB._guard_totals(np.array([1 << 31], np.int64))
+
+
+# ------------------------------------------------------------------ batcher
+def test_canonical_itemset():
+    assert canonical_itemset((3, 1, 3, 2)) == (1, 2, 3)
+    assert canonical_itemset((1, 2)) == canonical_itemset([2, 1])
+
+
+def test_batcher_cross_client_dedup_and_scatter():
+    b = MicroBatcher(block_k=8)
+    t1 = b.submit("a", [(2, 1), (5,), (1, 2)])  # (1,2) twice within request
+    t2 = b.submit("b", [(1, 2), (7,)])          # and again across clients
+    assert b.pending == 2
+    plan = b.take()
+    assert b.pending == 0
+    assert plan.unique_keys == [(1, 2), (5,), (7,)]
+    assert plan.n_queries == 5
+    assert b.n_deduped == 2
+    assert [r.request_id for r in plan.requests] == [t1, t2]
+    assert plan.requests[0].keys == [(1, 2), (5,), (1, 2)]
+    assert plan.rows[(1, 2)] == 0 and plan.rows[(7,)] == 2
+
+
+def test_build_masks_padding_and_unknown():
+    vocab = ItemVocab(tuple(range(40)))       # W = 2 words
+    keys = [(0, 39), (3,), ("nope",)]
+    masks, known = build_masks(keys, vocab, block_k=8)
+    assert masks.shape == (8, 2)              # padded to the block_k multiple
+    assert known.tolist() == [True, True, False]
+    np.testing.assert_array_equal(masks[2], 0)    # unknown -> zero mask
+    np.testing.assert_array_equal(masks[3:], 0)   # padding rows
+    want = encode_targets([(0, 39), (3,)], vocab)
+    np.testing.assert_array_equal(masks[:2], want)
+    big, known = build_masks([(i,) for i in range(9)], vocab, block_k=8)
+    assert big.shape == (16, 2) and known.all()
+
+
+# -------------------------------------------------------------------- cache
+def test_cache_hit_miss_lru_and_purge():
+    c = CountCache(capacity=2)
+    assert c.get((1,), 0) is None and c.misses == 1
+    c.put((1,), 0, np.array([3, 4]))
+    hit = c.get((1,), 0)
+    np.testing.assert_array_equal(hit, [3, 4])
+    assert c.hits == 1
+    hit[0] = 99                               # defensive copy: cache unharmed
+    np.testing.assert_array_equal(c.get((1,), 0), [3, 4])
+    assert c.get((1,), 1) is None             # other version: miss
+    c.put((2,), 0, np.array([1, 1]))
+    c.get((1,), 0)                            # (1,) now most-recent
+    c.put((3,), 1, np.array([2, 2]))          # evicts LRU (2,)
+    assert c.evictions == 1
+    assert c.get((2,), 0) is None
+    assert c.get((1,), 0) is not None
+    assert c.purge_stale(current_version=1) == 1   # drops ((1,), 0)
+    assert len(c) == 1 and c.get((3,), 1) is not None
+
+
+def test_cache_invalidation_after_append_serves_fresh_counts():
+    rng = np.random.default_rng(3)
+    tx = _db(rng, 120, 8)
+    srv = CountServer(tx)
+    probes = [(0,), (1, 2)]
+    before = srv.query(probes)
+    launches = srv.store.kernel_launches
+    again = srv.query(probes)                 # pure cache: no device work
+    np.testing.assert_array_equal(again, before)
+    assert srv.store.kernel_launches == launches
+    assert srv.cache.hits == len(probes)
+
+    batch = [[0, 1, 2]] * 10                  # changes every probe's count
+    srv.append(batch)
+    assert len(srv.cache) == 0                # stale entries purged eagerly
+    after = srv.query(probes)                 # version bump: cache missed
+    assert srv.store.kernel_launches > launches
+    np.testing.assert_array_equal(
+        after, _fresh_counts(tx + batch, None, 1, probes))
+    assert (after != before).any()
+
+
+# -------------------------------------------------------------- CountServer
+def test_server_cross_client_dedup_bit_identical():
+    """Acceptance: deduped cross-client answers == direct itemset_counts."""
+    rng = np.random.default_rng(4)
+    tx = _db(rng, 180, 12)
+    y = [int(rng.random() < 0.4) for _ in tx]
+    srv = CountServer(tx, classes=y, cache=False, block_k=8)
+    t1 = srv.submit("a", [(0, 1), (2,), (1, 0)])
+    t2 = srv.submit("b", [(0, 1), (5, 6, 7)])
+    launches0 = srv.store.kernel_launches
+    res = srv.flush()
+    assert srv.store.kernel_launches == launches0 + 1   # ONE composed pass
+    ddb = DenseDB.encode(tx, classes=y, n_classes=2)
+    masks = encode_targets([(0, 1), (2,), (5, 6, 7)], ddb.vocab)
+    want = np.asarray(itemset_counts(ddb.bits, jnp.asarray(masks),
+                                     ddb.weights))
+    np.testing.assert_array_equal(res[t1], want[[0, 1, 0]])
+    np.testing.assert_array_equal(res[t2], want[[0, 2]])
+    assert res[t1].dtype == np.int32
+
+
+@pytest.mark.parametrize("streaming", [False, True])
+def test_server_exact_vs_dense_gfp_counts_after_appends(streaming):
+    """Acceptance: served counts == dense_gfp_counts at the same version,
+    after ≥2 append batches, with the cache enabled."""
+    rng = np.random.default_rng(5)
+    tx = _db(rng, 150, 10)
+    y = [int(rng.random() < 0.3) for _ in tx]
+    srv = CountServer(tx, classes=y, streaming=streaming, chunk_rows=32,
+                      merge_ratio=1e9)        # keep the delta segment live
+    history, classes = list(tx), list(y)
+    queries = [(0, 1), (2,), (4, 5, 6), (9,), (3, 8)]
+    for step in range(2):
+        batch = _db(rng, 50, 10)
+        yb = [int(rng.random() < 0.3) for _ in batch]
+        srv.append(batch, classes=yb)
+        history += batch
+        classes += yb
+        srv.query(queries)                    # populate the cache mid-history
+    assert srv.store.version == 2 and srv.store.delta_rows > 0
+    got = srv.query(queries)                  # served (partly) from cache
+
+    counts = {a: sum(1 for t in history if a in t) for a in range(10)}
+    tis = TISTree(ItemOrder.from_counts(counts))
+    for q in queries:
+        tis.insert(list(q), target=True)
+    want = dense_gfp_counts(tis, DenseDB.encode(history, classes=classes,
+                                                n_classes=2))
+    for i, q in enumerate(queries):
+        np.testing.assert_array_equal(got[i], want[canonical_itemset(q)])
+    oracle = brute_force_counts(history, queries)
+    assert all(int(got[i].sum()) == oracle[canonical_itemset(q)]
+               for i, q in enumerate(queries))
+
+
+def test_server_interleaved_query_leaves_pending_requests_queued():
+    """A query() between another client's submit() and flush() must neither
+    orphan that client's ticket nor freeze its counts at an older version:
+    the pending request stays queued and is answered at flush-time state."""
+    rng = np.random.default_rng(11)
+    tx = _db(rng, 90, 8)
+    srv = CountServer(tx)
+    ticket = srv.submit("a", [(0, 1), (2,)])
+    got_q = srv.query([(3,)])                 # must NOT drain the batcher
+    np.testing.assert_array_equal(got_q, _fresh_counts(tx, None, 1, [(3,)]))
+    assert srv.batcher.pending == 1
+    batch = [[0, 1, 2]] * 5
+    srv.append(batch)                         # version bump BEFORE a's flush
+    res = srv.flush()                         # a gets flush-time (v1) counts
+    np.testing.assert_array_equal(
+        res[ticket], _fresh_counts(tx + batch, None, 1, [(0, 1), (2,)]))
+    assert srv.flush() == {}                  # delivered exactly once
+
+
+def test_server_failed_flush_is_retryable(monkeypatch):
+    """A counting-pass failure must not orphan drained tickets: the plan is
+    restored to the batcher and a retried flush answers them."""
+    rng = np.random.default_rng(12)
+    tx = _db(rng, 60, 6)
+    srv = CountServer(tx, cache=False)
+    ticket = srv.submit("a", [(0, 1)])
+    monkeypatch.setattr(srv.store, "counts_masks",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("device lost")))
+    with pytest.raises(RuntimeError, match="device lost"):
+        srv.flush()
+    assert srv.batcher.pending == 1           # request re-queued
+    monkeypatch.undo()
+    res = srv.flush()
+    np.testing.assert_array_equal(
+        res[ticket], _fresh_counts(tx, None, 1, [(0, 1)]))
+
+
+def test_server_no_cache_and_empty_flush():
+    rng = np.random.default_rng(6)
+    srv = CountServer(_db(rng, 40, 6), cache=False)
+    assert srv.cache is None
+    assert srv.flush() == {}
+    t = srv.submit("a", [])
+    assert srv.flush()[t].shape == (0, 1)
+
+
+# ---------------------------------------------- incremental mining satellite
+def test_incremental_candidates_partition_and_completeness():
+    prev = [(1,), (2,), (1, 2)]
+    inc = [(2,), (3,), (2, 3)]
+    previously, newly = incremental_candidates(prev, inc)
+    assert previously == sorted(prev, key=repr)
+    assert newly == [(2, 3), (3,)]            # repr-sorted, prev excluded
+    assert not (set(previously) & set(newly))
+    assert set(previously) | set(newly) == set(prev) | set(inc)
+    assert incremental_candidates([], []) == ([], [])
+
+
+def test_incremental_miner_state_lifecycle():
+    m = IncrementalMiner(0.1)
+    assert m.state is None
+    with pytest.raises(RuntimeError, match="fit"):
+        m.update([[1, 2]])
+    with pytest.raises(RuntimeError, match="fit"):
+        m.frequent
+    with pytest.raises(RuntimeError, match="fit"):
+        m.n_seen
+    m.fit([[1, 2], [1], [2]])
+    assert m.n_seen == 3
+    assert m.frequent == m.state.frequent
+    with pytest.raises(ValueError):
+        IncrementalMiner(0.0)
+
+
+def test_incremental_parity_host_vs_engine_recount():
+    """Satellite parity: host IncrementalMiner (guided FP-tree recounts) ==
+    CountServer engine-backed recount, across several append batches."""
+    rng = np.random.default_rng(7)
+    theta = 0.08
+    tx = _db(rng, 250, 12, p=0.25)
+    miner = IncrementalMiner(theta)
+    srv = CountServer(tx, merge_ratio=1e9)    # delta path must stay exact too
+    assert miner.fit(tx) == srv.mine(theta)
+    for step in range(3):
+        batch = _db(rng, 80, 12 + 2 * step, p=0.25)  # new items mid-stream
+        want = miner.update(batch)
+        srv.append(batch)
+        assert srv.frequent == want, step
+    # and equals a full re-mine of everything (host oracle)
+    history = miner._require_state()          # sanity: state present
+    assert history.n == srv.store.n_rows
+
+
+def test_versioned_mine_frequent_matches_engines():
+    rng = np.random.default_rng(8)
+    tx = _db(rng, 200, 9, p=0.35)
+    want = mine_frequent(tx, 40)
+    store = VersionedDB(tx)
+    assert versioned_mine_frequent(store, 40) == want
+    assert dense_mine_frequent(DenseDB.encode(tx), 40) == want
+    # still exact with an uncompacted delta in play
+    store2 = VersionedDB(tx[:150], merge_ratio=1e9)
+    store2.append(tx[150:])
+    assert store2.delta_rows > 0
+    assert versioned_mine_frequent(store2, 40) == want
+
+
+def test_server_frequent_requires_mine():
+    srv = CountServer([[1, 2]])
+    with pytest.raises(RuntimeError, match="mine"):
+        srv.frequent
+    with pytest.raises(ValueError):
+        srv.mine(0.0)
+
+
+def test_server_mining_failures_disarm_incremental_maintenance(monkeypatch):
+    """A failed mine() must not arm incremental maintenance, and a failed
+    refresh during append() must disarm it: §5.2 completeness requires the
+    previous EXACT frequent set, so stale baselines raise instead of serve."""
+    rng = np.random.default_rng(13)
+    tx = _db(rng, 80, 6)
+    srv = CountServer(tx)
+    import repro.serve.service as service_mod
+    monkeypatch.setattr(service_mod, "versioned_mine_frequent",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("device lost")))
+    with pytest.raises(RuntimeError, match="device lost"):
+        srv.mine(0.1)
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="mine"):
+        srv.frequent                          # mine never succeeded
+    srv.append([[0, 1]])                      # and appends don't refresh
+
+    want = srv.mine(0.1)
+    assert srv.frequent == want
+    from repro.serve import MiningRefreshError
+    monkeypatch.setattr(srv.store, "counts",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("device lost")))
+    with pytest.raises(MiningRefreshError, match="do not retry") as ei:
+        srv.append([[0, 1, 2]] * 5)
+    monkeypatch.undo()
+    assert ei.value.version == srv.store.version  # batch WAS committed
+    with pytest.raises(RuntimeError, match="mine"):
+        srv.frequent                          # stale baseline disarmed
+
+
+# ----------------------------------------------------------------- launcher
+def test_serve_counts_launcher_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_counts", "--rows", "600",
+         "--items", "16", "--rounds", "3", "--batch", "8", "--appends", "1",
+         "--append-rows", "100", "--pool", "32", "--theta", "0.1",
+         "--verify"],
+        env=env, capture_output=True, text=True, timeout=300, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout[-1500:] + proc.stderr[-1500:]
+    assert "verified" in proc.stdout and "us/query" in proc.stdout

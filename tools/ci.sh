@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # CI entry point: fast tier first (fail fast, no slow tests), then the full
-# suite including the slow multi-device subprocess tests, then the streaming
-# perf record (BENCH_streaming.json artifact).
+# suite including the slow multi-device subprocess tests, then the serving
+# smoke (end-to-end count server with exactness verify), then the perf
+# records (BENCH_streaming.json / BENCH_serve.json artifacts).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,5 +14,12 @@ python -m pytest -x -q -m "not slow"
 echo "=== full suite (--runslow) ==="
 python -m pytest -q --runslow
 
+echo "=== serving smoke (count server submit/flush/append + verify) ==="
+python -m repro.launch.serve_counts --rows 2000 --items 24 --rounds 4 \
+    --batch 16 --appends 1 --append-rows 300 --pool 64 --theta 0.08 --verify
+
 echo "=== streaming perf record ==="
 python -m benchmarks.streaming --json BENCH_streaming.json
+
+echo "=== serving perf record ==="
+python -m benchmarks.serve --json BENCH_serve.json
