@@ -1,0 +1,234 @@
+"""Unified-driver mining-loop benchmark: driver shims vs the legacy loops.
+
+PR 3 consolidated the four level-synchronous mining loops into ONE driver
+(``repro/mining/driver.py``) over the ``CountBackend`` protocol.  This bench
+proves the refactor is perf-neutral (or better): it replays the PRE-refactor
+dense and streaming loops (replicated verbatim below — they no longer exist
+in ``src/``) against the driver-backed entry points on the same problem, and
+records wall-time PER LEVEL on both engines plus end-to-end totals.
+
+  PYTHONPATH=src python -m benchmarks.mine_loop [--json BENCH_mine.json]
+  PYTHONPATH=src python -m benchmarks.mine_loop --smoke   # CI sanity check
+
+Exactness is asserted for every variant (identical frequent dicts), so the
+record doubles as a parity smoke.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.apriori import apriori_gen
+from repro.mining import (DenseBackend, DenseDB, StreamingBackend,
+                          StreamingDB, encode_targets, mine_frequent_backend)
+from repro.kernels.itemset_count import itemset_counts
+
+from .common import Row
+
+N, M, P, MIN_COUNT, CHUNK_ROWS = 30_000, 18, 0.3, 2400, 4096
+SMOKE = (2_000, 12, 0.3, 220, 512)
+REPEATS = 3
+
+
+def _transactions(n: int, m: int, p: float, seed: int = 0) -> List[List[int]]:
+    rng = np.random.default_rng(seed)
+    mat = rng.random((n, m)) < p
+    return [np.flatnonzero(row).tolist() for row in mat]
+
+
+# --------------------------------------------------------------------------
+# The PRE-refactor loops, replicated as baselines (deleted from src/ by the
+# consolidation; kept here so the perf record keeps comparing against them).
+# --------------------------------------------------------------------------
+
+def legacy_dense_mine(db: DenseDB, min_count: float, max_len: int,
+                      level_times: List[float]) -> Dict[Tuple[int, ...], int]:
+    import jax.numpy as jnp
+
+    t0 = time.perf_counter()
+    w = np.asarray(db.weights)
+    bits_np = np.asarray(db.bits)
+    out: Dict[Tuple[int, ...], int] = {}
+    frequent = set()
+    for c, a in enumerate(db.vocab.items):
+        bit = (bits_np[:, c >> 5] >> np.uint32(c & 31)) & 1
+        cnt = int((bit[:, None] * w).sum(axis=0).sum())
+        if cnt >= min_count:
+            frequent.add(frozenset([a]))
+            out[(a,)] = cnt
+    level_times.append(time.perf_counter() - t0)
+    k = 1
+    while frequent and (max_len == 0 or k < max_len):
+        t0 = time.perf_counter()
+        cands = apriori_gen(frequent, k)
+        if not cands:
+            break
+        itemsets = [tuple(sorted(s, key=repr)) for s in cands]
+        masks = encode_targets(itemsets, db.vocab)
+        counts = np.asarray(itemset_counts(db.bits, jnp.asarray(masks),
+                                           db.weights))
+        frequent = set()
+        for itemset, row in zip(itemsets, counts):
+            cnt = int(row.sum())
+            if cnt >= min_count:
+                frequent.add(frozenset(itemset))
+                out[itemset] = cnt
+        k += 1
+        level_times.append(time.perf_counter() - t0)
+    return out
+
+
+def legacy_streaming_mine(db: StreamingDB, min_count: float, max_len: int,
+                          level_times: List[float]
+                          ) -> Dict[Tuple[int, ...], int]:
+    from repro.mining import streaming_counts
+
+    def count_level(itemsets):
+        masks = encode_targets(itemsets, db.vocab)
+        return np.asarray(streaming_counts(db.bits, masks, db.weights,
+                                           chunk_rows=db.chunk_rows))
+
+    def absorb(itemsets, rows):
+        frequent = set()
+        for itemset, row in zip(itemsets, rows):
+            cnt = int(row.sum())
+            if cnt >= min_count:
+                frequent.add(frozenset(itemset))
+                out[itemset] = cnt
+        return frequent
+
+    out: Dict[Tuple[int, ...], int] = {}
+    t0 = time.perf_counter()
+    singles = [(a,) for a in db.vocab.items]
+    frequent = absorb(singles, count_level(singles)) if singles else set()
+    level_times.append(time.perf_counter() - t0)
+    level = 1
+    while frequent and (max_len == 0 or level < max_len):
+        t0 = time.perf_counter()
+        cands = apriori_gen(frequent, level)
+        if not cands:
+            break
+        itemsets = [tuple(sorted(s, key=repr)) for s in cands]
+        frequent = absorb(itemsets, count_level(itemsets))
+        level += 1
+        level_times.append(time.perf_counter() - t0)
+    return out
+
+
+def _driver_mine(backend, min_count: float, max_len: int,
+                 level_times: List[float]) -> Dict[Tuple[int, ...], int]:
+    marks = [time.perf_counter()]
+
+    def on_level(level, n_cands, n_freq):
+        marks.append(time.perf_counter())
+
+    got = mine_frequent_backend(backend, min_count, max_len=max_len,
+                                on_level=on_level)
+    level_times.extend(b - a for a, b in zip(marks, marks[1:]))
+    return got
+
+
+def _best_run(fn, repeats: int):
+    """(total_seconds, per-level seconds, result) of the fastest repeat."""
+    best = None
+    for _ in range(repeats):
+        levels: List[float] = []
+        t0 = time.perf_counter()
+        got = fn(levels)
+        total = time.perf_counter() - t0
+        if best is None or total < best[0]:
+            best = (total, levels, got)
+    return best
+
+
+def run(record: Optional[List[dict]] = None, smoke: bool = False,
+        repeats: int = REPEATS) -> List[Row]:
+    n, m, p, min_count, chunk_rows = SMOKE if smoke else (N, M, P, MIN_COUNT,
+                                                          CHUNK_ROWS)
+    max_len = 2 if smoke else 0          # smoke: one generated level suffices
+    tx = _transactions(n, m, p)
+    ddb = DenseDB.encode(tx)
+    sdb = StreamingDB.encode(tx, chunk_rows=chunk_rows)
+
+    variants = [
+        ("dense/legacy", lambda lv: legacy_dense_mine(ddb, min_count,
+                                                      max_len, lv)),
+        ("dense/driver", lambda lv: _driver_mine(DenseBackend(ddb), min_count,
+                                                 max_len, lv)),
+        ("streaming/legacy", lambda lv: legacy_streaming_mine(
+            sdb, min_count, max_len, lv)),
+        ("streaming/driver", lambda lv: _driver_mine(
+            StreamingBackend(sdb), min_count, max_len, lv)),
+    ]
+
+    rows: List[Row] = []
+    results: Dict[str, dict] = {}
+    totals: Dict[str, float] = {}
+    for name, fn in variants:
+        total, levels, got = _best_run(fn, repeats)
+        totals[name] = total
+        results[name] = got
+        rows.append((f"mine_loop/{name}", total * 1e6,
+                     f"levels={len(levels)};frequent={len(got)}"))
+        if record is not None:
+            record.append({
+                "variant": name, "total_us": total * 1e6,
+                "us_per_level": [t * 1e6 for t in levels],
+                "n_frequent": len(got),
+            })
+
+    # exactness: the driver shims reproduce the legacy loops bit-for-bit
+    assert results["dense/driver"] == results["dense/legacy"]
+    assert results["streaming/driver"] == results["streaming/legacy"]
+    assert results["dense/driver"] == results["streaming/driver"]
+
+    for engine in ("dense", "streaming"):
+        ratio = totals[f"{engine}/driver"] / max(totals[f"{engine}/legacy"],
+                                                 1e-9)
+        rows.append((f"mine_loop/{engine}/driver_vs_legacy", ratio,
+                     "ratio<=1 means driver is not slower"))
+        if record is not None:
+            record.append({"variant": f"{engine}/driver_vs_legacy",
+                           "ratio": ratio})
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_mine.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem, exactness-only sanity (no JSON)")
+    ap.add_argument("--repeats", type=int, default=REPEATS)
+    args = ap.parse_args()
+
+    record: Optional[List[dict]] = None if args.smoke else []
+    rows = run(record, smoke=args.smoke, repeats=args.repeats)
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if args.smoke:
+        print("mine-loop smoke OK (driver == legacy on both engines)")
+        return
+
+    n, m, p = N, M, P
+    payload = {
+        "bench": "mine_loop",
+        "backend": jax.default_backend(),
+        "problem": {"n": n, "m": m, "p": p, "min_count": MIN_COUNT,
+                    "chunk_rows": CHUNK_ROWS},
+        "rows": record,
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.json} ({len(record)} records)")
+
+
+if __name__ == "__main__":
+    main()

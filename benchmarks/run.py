@@ -9,6 +9,7 @@ kernel  — counting-kernel micro + GFP §3.1 optimization ablation
 scaling — distributed engine strong-scaling on an 8-device host mesh
 stream  — streaming out-of-core sweep vs single-pass dense counting
 serve   — micro-batched count serving vs per-query launches, cold/warm cache
+mine    — unified level-wise mining driver vs the legacy per-engine loops
 """
 import argparse
 import sys
@@ -18,7 +19,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig5", "fig6", "kernel", "scaling", "stream",
-                             "serve"])
+                             "serve", "mine"])
     args = ap.parse_args()
 
     from .common import emit
@@ -42,6 +43,9 @@ def main() -> None:
     if args.only in (None, "serve"):
         from . import serve
         suites["serve"] = serve.run
+    if args.only in (None, "mine"):
+        from . import mine_loop
+        suites["mine"] = mine_loop.run
 
     print("name,us_per_call,derived")
     ok = True

@@ -2,26 +2,41 @@
 
 Builds a transaction DB, mines it with the streaming engine in small host
 chunks (simulating a DB far larger than device memory), and demonstrates the
-per-chunk checkpoint: the first mine is killed mid-level, the second resumes
-from the last completed chunk and still produces the exact rule set of the
-single-pass dense engine.
+per-chunk checkpoint of the unified mining driver: the first mine is killed
+mid-level, the second resumes from the last completed chunk and still
+produces the exact rule set of the single-pass dense engine.
 
-  PYTHONPATH=src python examples/streaming_bigdata.py [rows] [chunk_rows]
+  PYTHONPATH=src python examples/streaming_bigdata.py [--rows N] \
+      [--chunk-rows C] [--ckpt mine.ckpt.json]
+
+With ``--ckpt PATH`` the resumable mine runs through the unified driver
+(``repro.mining.driver``) against that DURABLE path: Ctrl-C it mid-run,
+re-run the same command, and it picks up from the last completed chunk —
+the same ``MiningCheckpoint`` contract every backend (dense, streaming,
+distributed, versioned serving store) now shares.  Without ``--ckpt`` the
+kill/resume cycle is simulated in-process under a temp file.
 """
+import argparse
 import os
-import sys
 import tempfile
 import time
 
 from repro.core import minority_report
 from repro.data import bernoulli_db
-from repro.mining import StreamingDB, minority_report_dense, streaming_mine_frequent
+from repro.mining import (StreamingBackend, StreamingDB,
+                          mine_frequent_backend, minority_report_dense)
 from repro.mining.distributed import MiningCheckpoint
 
 
 def main() -> None:
-    rows = int(sys.argv[1]) if len(sys.argv) > 1 else 20000
-    chunk_rows = int(sys.argv[2]) if len(sys.argv) > 2 else 1024
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=20000)
+    ap.add_argument("--chunk-rows", type=int, default=1024)
+    ap.add_argument("--ckpt", default=None,
+                    help="durable MiningCheckpoint path: kill this process "
+                         "mid-mine and re-run to resume from the last chunk")
+    args = ap.parse_args()
+    rows, chunk_rows = args.rows, args.chunk_rows
 
     tx, y = bernoulli_db(rows, 40, p_x=0.15, p_y=0.03, seed=7)
     print(f"db: {rows} rows, chunked at {chunk_rows} rows/chunk")
@@ -38,8 +53,33 @@ def main() -> None:
     print(f"{res.engine} engine: {len(res.rules)} rules in {t_stream:.2f}s "
           f"(== host-faithful MRA)")
 
-    # ---- kill/resume: durable per-chunk progress ---------------------------
+    # ---- kill/resume through the unified driver ----------------------------
     sdb = StreamingDB.encode(tx, chunk_rows=chunk_rows)
+    backend = StreamingBackend(sdb)
+    min_count = rows * 0.01
+
+    if args.ckpt:
+        # durable mode: progress survives THIS process — kill and re-run
+        ckpt = MiningCheckpoint(args.ckpt)
+        state = ckpt.load_state()
+        if state is not None:
+            partial = state.get("partial")
+            where = (f"mid-level {partial['level']}, chunk "
+                     f"{partial['next_chunk']}" if partial
+                     else f"level {state['level']} complete")
+            print(f"resuming {args.ckpt}: {where}")
+        chunks = []
+        got = mine_frequent_backend(
+            backend, min_count, checkpoint=ckpt,
+            on_chunk=lambda lvl, c: chunks.append((lvl, c)))
+        want = mine_frequent_backend(backend, min_count)
+        assert got == want
+        print(f"driver mine complete: {len(got)} frequent itemsets after "
+              f"{len(chunks)} chunk-counts this run (== uninterrupted run); "
+              f"delete {args.ckpt} to start fresh")
+        return
+
+    # simulated mode: preempt mid-level in-process, then resume
     fd, ckpt_path = tempfile.mkstemp(suffix=".mine.json")
     os.close(fd)
     ckpt = MiningCheckpoint(ckpt_path)
@@ -56,21 +96,22 @@ def main() -> None:
             raise _Preempted()
 
     try:
-        streaming_mine_frequent(sdb, min_count=rows * 0.01, checkpoint=ckpt,
-                                on_chunk=die_midway)
+        mine_frequent_backend(backend, min_count, checkpoint=ckpt,
+                              on_chunk=die_midway)
         print("db too small to be preempted mid-level; try more rows")
     except _Preempted:
         level, chunk = seen[-1]
         print(f"killed at level {level}, chunk {chunk + 1}/{sdb.n_chunks}")
 
     resumed = []
-    got = streaming_mine_frequent(sdb, min_count=rows * 0.01, checkpoint=ckpt,
-                                  on_chunk=lambda l, c: resumed.append((l, c)))
-    want = streaming_mine_frequent(sdb, min_count=rows * 0.01)
+    got = mine_frequent_backend(backend, min_count, checkpoint=ckpt,
+                                on_chunk=lambda l, c: resumed.append((l, c)))
+    want = mine_frequent_backend(backend, min_count)
     assert got == want
     print(f"resumed at level {resumed[0][0]}, chunk {resumed[0][1] + 1} — "
           f"{len(resumed)} chunk-counts instead of {len(seen) + len(resumed)}"
           f"+; {len(got)} frequent itemsets, identical to uninterrupted run")
+    os.unlink(ckpt_path)
 
 
 if __name__ == "__main__":

@@ -172,8 +172,10 @@ class IncrementalMiner:
 def ceil_count(x: float) -> int:
     """The repo-wide frequency threshold rule: ``count >= x`` with a float
     threshold, epsilon-guarded against FP noise, floored at 1.  Shared by the
-    host miners (``mra``-style inline until consolidated), the incremental
-    miner, and the serving engine — the parity tests assume ONE rule."""
+    host miners, the incremental miner, and the serving engine's theta ->
+    min_count conversion (``CountServer.mine``); the unified level-wise
+    driver (``mining/driver.py``) takes the resulting ``min_count`` directly,
+    so every engine applies ONE rule — the parity tests assume it."""
     import math
     return max(1, math.ceil(x - 1e-9))
 

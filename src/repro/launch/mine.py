@@ -47,6 +47,15 @@ def main() -> None:
           f"{int(y.sum())} rare-class rows")
 
     ckpt = MiningCheckpoint(args.ckpt) if args.ckpt else None
+    if ckpt is not None:
+        state = ckpt.load_state()
+        if state is not None:
+            partial = state.get("partial")
+            where = (f"mid-level {partial['level']} at chunk "
+                     f"{partial['next_chunk']}" if partial
+                     else f"level {state['level']} complete")
+            print(f"resuming from checkpoint {args.ckpt}: {where}, "
+                  f"{len(state['frequent'])} itemsets banked")
     t0 = time.time()
     res = minority_report_dense(
         tx, y, min_support=args.min_support, min_confidence=args.min_conf,

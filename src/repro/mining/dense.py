@@ -185,17 +185,21 @@ def dense_mine_frequent(
 ) -> Dict[Tuple[Item, ...], int]:
     """Level-synchronous exact frequent-itemset mining on the device.
 
-    Candidate level k+1 is generated (host) from frequent level k via prefix
-    join + anti-monotone prune; each level is counted in ONE kernel launch —
-    the §5.1 'single guided invocation per level' realized densely.
-    ``class_column`` restricts support to one weight column (rare class).
+    A shim over the unified driver (``mining/driver.py``): candidate level
+    k+1 is generated (host) from frequent level k via prefix join +
+    anti-monotone prune; each level is counted in ONE kernel launch — the
+    §5.1 'single guided invocation per level' realized densely (level 1 via
+    the host column-sum shortcut).  ``class_column`` restricts support to one
+    weight column (rare class).
 
-    The streaming path (``streaming=True``, a ``StreamingDB`` input, or an
-    auto-selected large DB) sweeps each level's counts in N-chunks and, with
-    a ``checkpoint``, persists per-chunk progress so a killed mine resumes
-    mid-level (see ``streaming_mine_frequent``).
+    The streaming path (``streaming=True``, a ``StreamingDB`` input, an
+    auto-selected large DB, or any ``checkpoint``) runs the same driver over
+    the out-of-core backend: each level's counts sweep in N-chunks with
+    per-chunk durable progress, so a killed mine resumes mid-level (see
+    ``streaming_mine_frequent``).
     """
-    from ..core.apriori import apriori_gen
+    from .backend import DenseBackend
+    from .driver import mine_frequent as _driver_mine
 
     if checkpoint is not None and streaming is False:
         raise ValueError("per-chunk checkpointing requires the streaming "
@@ -211,40 +215,8 @@ def dense_mine_frequent(
             sdb, min_count, class_column=class_column, max_len=max_len,
             use_kernel=use_kernel, checkpoint=checkpoint, on_chunk=on_chunk)
 
-    col = slice(None) if class_column is None else class_column
-    w = np.asarray(db.weights)
-    item_counts: Dict[Item, int] = {}
-    # level 1 straight from column sums
-    bits_np = np.asarray(db.bits)
-    for c, a in enumerate(db.vocab.items):
-        bit = (bits_np[:, c >> 5] >> np.uint32(c & 31)) & 1
-        cnt = int((bit[:, None] * w).sum(axis=0)[col].sum()) if class_column is None \
-            else int((bit * w[:, class_column]).sum())
-        item_counts[a] = cnt
-    threshold = min_count
-    out: Dict[Tuple[Item, ...], int] = {}
-    frequent = set()
-    for a, c in item_counts.items():
-        if c >= threshold:
-            frequent.add(frozenset([a]))
-            out[(a,)] = c
-    k = 1
-    while frequent and (max_len == 0 or k < max_len):
-        cands = apriori_gen(frequent, k)
-        if not cands:
-            break
-        itemsets = [tuple(sorted(s, key=repr)) for s in cands]
-        masks = encode_targets(itemsets, db.vocab)
-        counts = np.asarray(itemset_counts(
-            db.bits, jnp.asarray(masks), db.weights, use_kernel=use_kernel))
-        frequent = set()
-        for itemset, row in zip(itemsets, counts):
-            cnt = int(row.sum()) if class_column is None else int(row[class_column])
-            if cnt >= threshold:
-                frequent.add(frozenset(itemset))
-                out[itemset] = cnt
-        k += 1
-    return out
+    return _driver_mine(DenseBackend(db, use_kernel=use_kernel), min_count,
+                        class_column=class_column, max_len=max_len)
 
 
 @dataclass

@@ -173,8 +173,11 @@ class MiningCheckpoint:
         return state["level"], state["frequent"], state["meta"]
 
     def load_state(self) -> Optional[dict]:
-        """Full state incl. the mid-level ``partial`` record (or None)."""
-        if not os.path.exists(self.path):
+        """Full state incl. the mid-level ``partial`` record (or None).
+        A missing or EMPTY file means no state: saves are atomic (write tmp
+        + rename), so a 0-byte file can only be a pre-created placeholder
+        (e.g. ``mkstemp``), never a torn write."""
+        if not os.path.exists(self.path) or os.path.getsize(self.path) == 0:
             return None
         with open(self.path) as f:
             payload = json.load(f)
@@ -247,47 +250,17 @@ class DistributedMiner:
         class_column: Optional[int] = None,
         max_len: int = 0,
     ) -> Dict[Tuple[Item, ...], int]:
-        from ..core.apriori import apriori_gen
+        """Shim over the unified driver (``mining/driver.py``): one mesh
+        counting launch per level (singles included), per-level checkpoint
+        saves — plus the driver's mid-level partial, so a restart (possibly
+        on a DIFFERENT mesh shape: the signature is mesh-independent) skips
+        any fully-counted level."""
+        from .backend import DistributedBackend
+        from .driver import mine_frequent as _driver_mine
 
-        start_level = 1
-        out: Dict[Tuple[Item, ...], int] = {}
-        frequent: set = set()
-
-        resumed = self.checkpoint.load() if self.checkpoint else None
-        if resumed is not None:
-            start_level, out, _ = resumed
-            out = {tuple(k): v for k, v in out.items()}
-            frequent = {frozenset(k) for k, v in out.items()
-                        if len(k) == start_level}
-        else:
-            # level 1: per-item counts in one launch (single-bit targets)
-            singles = [(a,) for a in vocab.items]
-            if singles:
-                masks = encode_targets(singles, vocab)
-                rows = self.counts(tx_bits, masks, weights)
-                for (a,), row in zip(singles, rows):
-                    cnt = int(row.sum()) if class_column is None else int(row[class_column])
-                    if cnt >= min_count:
-                        out[(a,)] = cnt
-                        frequent.add(frozenset([a]))
-            if self.checkpoint:
-                self.checkpoint.save(1, out)
-
-        k = start_level
-        while frequent and (max_len == 0 or k < max_len):
-            cands = apriori_gen(frequent, k)
-            if not cands:
-                break
-            itemsets = [tuple(sorted(s, key=repr)) for s in cands]
-            masks = encode_targets(itemsets, vocab)
-            rows = self.counts(tx_bits, masks, weights)
-            frequent = set()
-            for itemset, row in zip(itemsets, rows):
-                cnt = int(row.sum()) if class_column is None else int(row[class_column])
-                if cnt >= min_count:
-                    frequent.add(frozenset(itemset))
-                    out[itemset] = cnt
-            k += 1
-            if self.checkpoint:
-                self.checkpoint.save(k, out)
-        return out
+        backend = DistributedBackend(
+            lambda masks: self.counts(tx_bits, masks, weights),
+            vocab, int(tx_bits.shape[0]), int(weights.shape[1]),
+            nbytes=int(tx_bits.nbytes + weights.nbytes))
+        return _driver_mine(backend, min_count, class_column=class_column,
+                            max_len=max_len, checkpoint=self.checkpoint)

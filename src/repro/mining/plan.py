@@ -99,6 +99,13 @@ def stream_chunks(n_rows: int, chunk_rows: int) -> List[Tuple[int, int]]:
             for s in range(0, n_rows, chunk_rows)]
 
 
+def canonical_itemsets(cands) -> List[Tuple[Item, ...]]:
+    """Frozenset candidates -> repr-sorted tuples in a deterministic list
+    order — the repo-wide canonical level layout (checkpoint partials store
+    this exact list, so resume can regenerate and compare it)."""
+    return [tuple(sorted(s, key=repr)) for s in cands]
+
+
 def live_items(level: LevelPlan, vocab: ItemVocab) -> List[Item]:
     """Union of items appearing in a level's masks (column-projection driver)."""
     union = np.zeros(level.masks.shape[1], dtype=np.uint32)

@@ -11,10 +11,12 @@ host-memory FP-trees, adapted to the TPU layout:
     accumulating the small (K, C) count block on device
     (``itemset_counts_into``, donated accumulator).  Counts are int32 sums,
     so the sweep is bit-identical to a single dense pass for every chunking;
-  * ``streaming_mine_frequent`` is the level-synchronous miner on top, with
-    per-chunk checkpointing: a ``MiningCheckpoint`` records (completed levels,
-    current level's itemsets, next chunk, partial accumulator), so a killed
-    mine resumes MID-LEVEL from the last completed chunk.
+  * ``streaming_mine_frequent`` is the level-synchronous miner on top — a
+    shim over the unified driver (``mining/driver.py``) with the
+    ``StreamingBackend``, whose per-chunk checkpointing (a
+    ``MiningCheckpoint`` records completed levels, the current level's
+    itemsets, next chunk, and the partial accumulator) lets a killed mine
+    resume MID-LEVEL from the last completed chunk.
 
 Overlap: jax dispatch is async — the ``jax.device_put`` of chunk i+1 is
 enqueued before the host blocks on chunk i's compute, double-buffering the
@@ -31,7 +33,7 @@ accumulator — guarded at sweep start).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Hashable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +41,7 @@ import numpy as np
 
 from ..kernels.itemset_count import itemset_counts_into
 from .encode import (ItemVocab, class_weights, dedup_rows, encode_bitmap,
-                     encode_targets, project_columns)
+                     project_columns)
 from .plan import choose_chunk_rows, stream_chunks
 
 Item = Hashable
@@ -211,56 +213,6 @@ class StreamingDB:
 # Level-synchronous mining over a StreamingDB with mid-level checkpointing.
 # ---------------------------------------------------------------------------
 
-def _level_itemsets_from_frequent(frequent, k) -> List[Tuple[Item, ...]]:
-    from ..core.apriori import apriori_gen
-    cands = apriori_gen(frequent, k)
-    return [tuple(sorted(s, key=repr)) for s in cands]  # deterministic order
-
-
-def _count_level(
-    db: StreamingDB,
-    itemsets: List[Tuple[Item, ...]],
-    level: int,
-    out: Dict[Tuple[Item, ...], int],
-    partial: Optional[dict],
-    checkpoint,                      # Optional[MiningCheckpoint]
-    *,
-    use_kernel: bool,
-    accum: str,
-    on_chunk: Optional[Callable[[int, int], None]] = None,
-) -> np.ndarray:
-    """One level's (K, C) counts, resuming from ``partial`` when it matches."""
-    masks = encode_targets(itemsets, db.vocab)
-    start, init = 0, None
-    wire = [list(t) for t in itemsets]  # JSON-stable identity of this level
-    if (partial and partial.get("level") == level
-            and partial.get("itemsets") == wire
-            # chunk indices only transfer between identical chunk geometries;
-            # a chunk_rows/row-count change restarts the level from chunk 0
-            and partial.get("chunk_rows") == db.chunk_rows
-            and partial.get("n_rows") == int(db.bits.shape[0])):
-        start = int(partial["next_chunk"])
-        init = np.asarray(partial["acc"], np.int32)
-
-    def _ckpt(j: int, acc) -> None:
-        if checkpoint is not None:
-            checkpoint.save(level - 1, out, partial={
-                "level": level, "itemsets": wire, "next_chunk": j + 1,
-                "acc": np.asarray(acc).tolist(),
-                "chunk_rows": db.chunk_rows,
-                "n_rows": int(db.bits.shape[0]),
-            })
-        if on_chunk is not None:  # after the save: a crash here resumes at j+1
-            on_chunk(level, j)
-
-    hook = _ckpt if (checkpoint is not None or on_chunk is not None) else None
-    rows = streaming_counts(
-        db.bits, masks, db.weights, chunk_rows=db.chunk_rows,
-        use_kernel=use_kernel, accum=accum, start_chunk=start, init=init,
-        on_chunk=hook)
-    return np.asarray(rows)
-
-
 def streaming_mine_frequent(
     db: StreamingDB,
     min_count: float,
@@ -274,57 +226,19 @@ def streaming_mine_frequent(
 ) -> Dict[Tuple[Item, ...], int]:
     """Exact level-synchronous mining, out-of-core, resumable mid-level.
 
-    Same contract as ``dense_mine_frequent`` (identical result dict).  With a
+    A shim over the unified driver (``mining/driver.py``) with the
+    out-of-core :class:`~repro.mining.backend.StreamingBackend`.  Same
+    contract as ``dense_mine_frequent`` (identical result dict).  With a
     ``checkpoint``, progress is durable per chunk: a restart re-loads the
     completed levels, regenerates the interrupted level's candidate list
     (deterministic), and resumes its sweep from the last completed chunk.
     ``on_chunk(level, chunk_idx)`` is a test/progress hook.
     """
-    out: Dict[Tuple[Item, ...], int] = {}
-    partial: Optional[dict] = None
-    level = 0
-    if checkpoint is not None:
-        state = checkpoint.load_state()
-        if state is not None:
-            level = int(state["level"])
-            out = dict(state["frequent"])
-            partial = state.get("partial")
+    # function-level import: backend.py consumes this module's sweep
+    from .backend import StreamingBackend
+    from .driver import mine_frequent as _driver_mine
 
-    def _absorb(itemsets, rows) -> set:
-        frequent = set()
-        for itemset, row in zip(itemsets, rows):
-            cnt = (int(row.sum()) if class_column is None
-                   else int(row[class_column]))
-            if cnt >= min_count:
-                frequent.add(frozenset(itemset))
-                out[itemset] = cnt
-        return frequent
-
-    if level == 0:
-        singles = [(a,) for a in db.vocab.items]
-        frequent: set = set()
-        if singles:
-            rows = _count_level(db, singles, 1, out, partial, checkpoint,
-                                use_kernel=use_kernel, accum=accum,
-                                on_chunk=on_chunk)
-            partial = None
-            frequent = _absorb(singles, rows)
-        level = 1
-        if checkpoint is not None:
-            checkpoint.save(level, out)
-    else:
-        frequent = {frozenset(t) for t in out if len(t) == level}
-
-    while frequent and (max_len == 0 or level < max_len):
-        itemsets = _level_itemsets_from_frequent(frequent, level)
-        if not itemsets:
-            break
-        rows = _count_level(db, itemsets, level + 1, out, partial, checkpoint,
-                            use_kernel=use_kernel, accum=accum,
-                            on_chunk=on_chunk)
-        partial = None
-        frequent = _absorb(itemsets, rows)
-        level += 1
-        if checkpoint is not None:
-            checkpoint.save(level, out)
-    return out
+    return _driver_mine(
+        StreamingBackend(db, use_kernel=use_kernel, accum=accum), min_count,
+        class_column=class_column, max_len=max_len, checkpoint=checkpoint,
+        on_chunk=on_chunk)

@@ -7,10 +7,10 @@ from .batcher import (BatchPlan, MicroBatcher, QueryRequest, build_masks,
 from .cache import CountCache
 from .service import (CountServer, MiningRefreshError,
                       versioned_mine_frequent)
-from .store import VersionedDB
+from .store import VersionedCountBackend, VersionedDB
 
 __all__ = [
     "BatchPlan", "MicroBatcher", "QueryRequest", "build_masks",
     "canonical_itemset", "CountCache", "CountServer", "MiningRefreshError",
-    "versioned_mine_frequent", "VersionedDB",
+    "versioned_mine_frequent", "VersionedCountBackend", "VersionedDB",
 ]

@@ -6,6 +6,12 @@ impossible, no flush coordination needed.  Stale-version entries age out of
 the LRU naturally; ``purge_stale`` drops them eagerly after an append when
 memory matters more than the O(capacity) sweep.
 
+Capacity is dual-budgeted: ``capacity`` bounds the entry COUNT, ``max_bytes``
+(optional) bounds the RESIDENT BYTES of the cached count rows — the right
+knob when row width varies (multi-class stores) or when the cache shares a
+host-memory budget with a streaming-resident DB.  Eviction is LRU under
+whichever budget is exceeded.
+
 A hit returns a defensive copy: cached rows are immutable serving results,
 never views into a caller's buffer.
 """
@@ -20,19 +26,40 @@ Key = Tuple[Hashable, ...]
 
 
 class CountCache:
-    """Bounded LRU: (itemset key, version) -> (C,) int32 count row."""
+    """Bounded LRU: (itemset key, version) -> (C,) int32 count row.
 
-    def __init__(self, capacity: int = 65536):
+    ``capacity`` caps the entry count; ``max_bytes`` (None = unbounded)
+    additionally caps the summed ``nbytes`` of the cached rows.  An entry
+    larger than ``max_bytes`` on its own cannot be admitted (it is evicted
+    immediately, leaving the cache empty) — the budget is a hard ceiling.
+    """
+
+    def __init__(self, capacity: int = 65536,
+                 max_bytes: Optional[int] = None):
         if capacity <= 0:
             raise ValueError("capacity must be positive")
+        if max_bytes is not None and max_bytes <= 0:
+            raise ValueError("max_bytes must be positive (or None)")
         self.capacity = capacity
+        self.max_bytes = max_bytes
         self._d: "OrderedDict[Tuple[Key, int], np.ndarray]" = OrderedDict()
+        self._bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._d)
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the cached count rows."""
+        return self._bytes
+
+    def _over_budget(self) -> bool:
+        return (len(self._d) > self.capacity
+                or (self.max_bytes is not None
+                    and self._bytes > self.max_bytes))
 
     def get(self, key: Key, version: int) -> Optional[np.ndarray]:
         entry = self._d.get((key, version))
@@ -45,16 +72,23 @@ class CountCache:
 
     def put(self, key: Key, version: int, counts: np.ndarray) -> None:
         k = (key, version)
-        self._d[k] = np.array(counts, np.int32, copy=True)
+        old = self._d.get(k)
+        if old is not None:
+            self._bytes -= old.nbytes
+        arr = np.array(counts, np.int32, copy=True)
+        self._d[k] = arr
+        self._bytes += arr.nbytes
         self._d.move_to_end(k)
-        while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
+        while self._d and self._over_budget():
+            _, dropped = self._d.popitem(last=False)
+            self._bytes -= dropped.nbytes
             self.evictions += 1
 
     def purge_stale(self, current_version: int) -> int:
         """Eagerly drop rows from superseded versions; returns how many."""
         stale = [k for k in self._d if k[1] != current_version]
         for k in stale:
+            self._bytes -= self._d[k].nbytes
             del self._d[k]
         return len(stale)
 
@@ -65,6 +99,7 @@ class CountCache:
 
     def stats(self) -> dict:
         return {"size": len(self._d), "capacity": self.capacity,
+                "bytes": self._bytes, "max_bytes": self.max_bytes,
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "hit_rate": round(self.hit_rate, 4)}

@@ -59,34 +59,25 @@ def versioned_mine_frequent(
     *,
     class_column: Optional[int] = None,
     max_len: int = 0,
+    checkpoint=None,                 # Optional[MiningCheckpoint]
+    on_chunk=None,
 ) -> Dict[Key, int]:
-    """Level-synchronous exact mining over a :class:`VersionedDB` — the same
-    contract as ``dense_mine_frequent`` but counting through the store's
-    composed base+delta sweep, so it is correct mid-append without compaction."""
-    from ..core.apriori import apriori_gen
+    """Level-synchronous exact mining over a :class:`VersionedDB` — a shim
+    over the unified driver (``mining/driver.py``) with the store-composed
+    :class:`~repro.serve.store.VersionedCountBackend`: the same contract as
+    ``dense_mine_frequent`` but counting through the store's composed
+    base+delta sweep, so it is correct mid-append without compaction.
 
-    def _absorb(itemsets, rows):
-        frequent = set()
-        for itemset, row in zip(itemsets, rows):
-            cnt = (int(row.sum()) if class_column is None
-                   else int(row[class_column]))
-            if cnt >= min_count:
-                frequent.add(frozenset(itemset))
-                out[itemset] = cnt
-        return frequent
+    With a ``checkpoint``, progress is durable at the store's chunk
+    granularity (base chunks + delta chunk) and PINNED to the store version:
+    a killed mine resumes mid-level at the same version, while a resume after
+    an ``append`` discards the stale state and restarts cleanly."""
+    from ..mining.driver import mine_frequent as _driver_mine
+    from .store import VersionedCountBackend
 
-    out: Dict[Key, int] = {}
-    singles = [(a,) for a in store.vocab.items]
-    frequent = _absorb(singles, store.counts(singles)) if singles else set()
-    k = 1
-    while frequent and (max_len == 0 or k < max_len):
-        cands = apriori_gen(frequent, k)
-        if not cands:
-            break
-        itemsets = [tuple(sorted(s, key=repr)) for s in cands]
-        frequent = _absorb(itemsets, store.counts(itemsets))
-        k += 1
-    return out
+    return _driver_mine(VersionedCountBackend(store), min_count,
+                        class_column=class_column, max_len=max_len,
+                        checkpoint=checkpoint, on_chunk=on_chunk)
 
 
 class CountServer:
@@ -102,6 +93,7 @@ class CountServer:
         streaming: Optional[bool] = None,
         chunk_rows: Optional[int] = None,
         cache_size: int = 65536,
+        cache_bytes: Optional[int] = None,
         cache: bool = True,
         block_k: int = 256,
         merge_ratio: float = 0.25,
@@ -112,7 +104,7 @@ class CountServer:
             merge_ratio=merge_ratio)
         self.batcher = MicroBatcher(block_k=block_k)
         self.cache: Optional[CountCache] = \
-            CountCache(cache_size) if cache else None
+            CountCache(cache_size, max_bytes=cache_bytes) if cache else None
         self.n_flushes = 0
         self.n_queries_served = 0
         self._theta: Optional[float] = None
@@ -215,13 +207,21 @@ class CountServer:
                 raise MiningRefreshError(version, e) from e
         return version
 
-    def mine(self, theta: float) -> Dict[Key, int]:
+    def mine(self, theta: float, *, checkpoint=None) -> Dict[Key, int]:
         """Bootstrap exact frequent-itemset mining at relative threshold
-        ``theta``; subsequent ``append`` calls maintain it incrementally."""
+        ``theta``; subsequent ``append`` calls maintain it incrementally.
+
+        ``checkpoint`` (a ``MiningCheckpoint``) makes the bootstrap RESUMABLE
+        through the unified driver: over a disk-sized streaming-backed store
+        the mine persists per-chunk progress, so a killed server process can
+        restart and finish the bootstrap from the last completed chunk.  The
+        durable state is pinned to the store version — a resume after further
+        appends restarts the mine cleanly instead of serving stale levels."""
         if not (0.0 < theta <= 1.0):
             raise ValueError("theta in (0, 1]")
         frequent = versioned_mine_frequent(
-            self.store, ceil_count(theta * self.store.n_rows))
+            self.store, ceil_count(theta * self.store.n_rows),
+            checkpoint=checkpoint)
         # commit only after the mine succeeds: a failed mine must not arm
         # incremental maintenance over an empty/stale baseline
         self._theta, self._frequent = theta, frequent

@@ -30,10 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.itemset_count import itemset_counts
+from ..mining.backend import CountBackend
 from ..mining.dense import DenseDB
 from ..mining.encode import (ItemVocab, class_weights, dedup_rows,
                              encode_bitmap, extend_vocab, pad_words)
-from ..mining.stream import (DEFAULT_STREAM_THRESHOLD_BYTES, StreamingDB)
+from ..mining.stream import (DEFAULT_STREAM_THRESHOLD_BYTES, StreamingDB,
+                             streaming_counts)
 
 Item = Hashable
 
@@ -67,6 +69,7 @@ class VersionedDB:
         self.kernel_launches = 0
         self.n_appends = 0
         self.n_compactions = 0
+        self.n_failed_compactions = 0
         self._delta_bits: Optional[np.ndarray] = None   # (D, W) uint32, host
         self._delta_weights: Optional[np.ndarray] = None  # (D, C) int32
         self._delta_device = None   # (bits, weights) device mirror, lazy
@@ -138,8 +141,9 @@ class VersionedDB:
 
     @property
     def nbytes(self) -> int:
-        base = int(np.asarray(self.base.bits).nbytes
-                   + np.asarray(self.base.weights).nbytes)
+        # .nbytes is metadata on both numpy and jax arrays: no D2H copy of a
+        # device-resident base just to report a size (stats run per flush)
+        base = int(self.base.bits.nbytes + self.base.weights.nbytes)
         if self._delta_bits is not None:
             base += self._delta_bits.nbytes + self._delta_weights.nbytes
         return base
@@ -152,6 +156,7 @@ class VersionedDB:
             "delta_rows": self.delta_rows, "nbytes": self.nbytes,
             "kernel_launches": self.kernel_launches,
             "appends": self.n_appends, "compactions": self.n_compactions,
+            "failed_compactions": self.n_failed_compactions,
         }
 
     # -- append ---------------------------------------------------------------
@@ -191,7 +196,16 @@ class VersionedDB:
         self.n_appends += 1
         self.version += 1
         if self.delta_rows > self.merge_ratio * max(1, self.base_rows):
-            self.compact()
+            try:
+                self.compact()
+            except Exception:
+                # compaction is a pure optimization and compact() is
+                # failure-safe (the new base is built BEFORE the delta
+                # drops), so the store still serves exact counts from
+                # base+delta.  The batch IS committed at this point — an
+                # escaping compactor error would masquerade as a rejected
+                # append and invite a double-counting retry.
+                self.n_failed_compactions += 1
         return self.version
 
     def compact(self) -> None:
@@ -288,3 +302,115 @@ class VersionedDB:
         out = self.counts_masks(masks)[:len(itemsets)]
         out[~known] = 0
         return out
+
+
+class VersionedCountBackend(CountBackend):
+    """:class:`~repro.mining.backend.CountBackend` over a :class:`VersionedDB`
+    — the seam that lets the unified mining driver (``mining/driver.py``) run
+    against the serving store's composed base+delta sweep, so it is exact
+    mid-append without compaction.
+
+    Chunk layout for mid-level checkpoint resume: the base segment's chunks
+    first (the ``StreamingDB`` chunk grid when the base is host-resident, one
+    chunk when device-dense), then one chunk for the delta segment.  The
+    ``mine_signature`` pins the store ``version``: a checkpoint resumed after
+    an ``append`` is discarded wholesale (levels counted at an older version
+    are not valid progress), while pure compaction — which changes the chunk
+    geometry but no count — only restarts the in-flight level from chunk 0.
+    """
+
+    def __init__(self, store: VersionedDB):
+        self.store = store
+
+    @property
+    def vocab(self) -> ItemVocab:
+        return self.store.vocab
+
+    @property
+    def n_rows(self) -> int:
+        return self.store.n_rows
+
+    @property
+    def n_classes(self) -> int:
+        return self.store.n_classes
+
+    @property
+    def nbytes(self) -> int:
+        return self.store.nbytes
+
+    def _base_chunks(self) -> int:
+        if not self.store.base_rows:
+            return 0
+        return (self.store.base.n_chunks
+                if isinstance(self.store.base, StreamingDB) else 1)
+
+    @property
+    def n_count_chunks(self) -> int:
+        delta = 1 if self.store._delta_bits is not None else 0
+        return max(1, self._base_chunks() + delta)
+
+    def chunk_signature(self) -> dict:
+        base = self.store.base
+        return {
+            "backend": "versioned", "version": self.store.version,
+            "base_rows": self.store.base_rows,
+            "delta_rows": self.store.delta_rows,
+            "chunk_rows": (base.chunk_rows
+                           if isinstance(base, StreamingDB) else None),
+        }
+
+    def mine_signature(self) -> dict:
+        return {"version": self.store.version}
+
+    def counts(self, masks: np.ndarray, *, start_chunk: int = 0,
+               init: Optional[np.ndarray] = None, on_chunk=None) -> np.ndarray:
+        store = self.store
+        k = int(masks.shape[0])
+        total = (np.zeros((k, store.n_classes), np.int32) if init is None
+                 else np.array(np.asarray(init), np.int32))
+        if k == 0:
+            return total
+        nb = self._base_chunks()
+        if nb and start_chunk < nb:
+            narrow, oob = store._narrow(
+                masks, int(np.asarray(store.base.bits).shape[1]))
+            if isinstance(store.base, StreamingDB):
+                hook = None
+                if on_chunk is not None:
+                    def hook(i, acc):
+                        a = np.asarray(acc)
+                        if i == nb - 1:
+                            # the saved boundary accumulator must already be
+                            # the finished base block (oob rows zeroed): a
+                            # resume at start_chunk == nb adds delta directly
+                            a = store._zero_oob(a, oob)
+                        on_chunk(i, a)
+                acc = streaming_counts(
+                    store.base.bits, narrow, store.base.weights,
+                    chunk_rows=store.base.chunk_rows,
+                    use_kernel=store.use_kernel,
+                    start_chunk=start_chunk, init=total, on_chunk=hook)
+                store.kernel_launches += nb - start_chunk
+                total = store._zero_oob(np.asarray(acc), oob)
+            else:
+                got = np.asarray(itemset_counts(
+                    store.base.bits, jnp.asarray(narrow), store.base.weights,
+                    use_kernel=store.use_kernel))
+                store.kernel_launches += 1
+                total = total + store._zero_oob(got, oob)
+                if on_chunk is not None:
+                    on_chunk(0, total)
+        if store._delta_bits is not None and start_chunk <= nb:
+            narrow, oob = store._narrow(masks, store._delta_bits.shape[1])
+            if store._delta_device is None:
+                store._delta_device = (jnp.asarray(store._delta_bits),
+                                       jnp.asarray(store._delta_weights))
+            d_bits, d_weights = store._delta_device
+            got = np.asarray(itemset_counts(
+                d_bits, jnp.asarray(narrow), d_weights,
+                use_kernel=store.use_kernel))
+            store.kernel_launches += 1
+            total = total + store._zero_oob(got, oob)
+            if on_chunk is not None:
+                on_chunk(nb, total)
+        return total

@@ -1,0 +1,286 @@
+"""Unified mining driver: one level-wise loop over the CountBackend protocol.
+
+Cross-backend parity (dense / streaming / distributed / versioned all yield
+the host oracle's frequent sets and counts through the ONE driver loop),
+kill/resume via MiningCheckpoint on every backend — including mid-level
+partials on single-chunk backends and the versioned store's version-pinned
+checkpoint — and the consolidation meta-check (exactly one apriori_gen-based
+engine loop in src/)."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import mine_frequent
+from repro.core.incremental import ceil_count
+from repro.mining import (DenseBackend, DenseDB, StreamingBackend,
+                          StreamingDB, dense_mine_frequent,
+                          mine_frequent_backend, streaming_mine_frequent)
+from repro.mining.distributed import DistributedMiner, MiningCheckpoint
+from repro.serve import (CountServer, VersionedCountBackend, VersionedDB,
+                         versioned_mine_frequent)
+
+
+def _db(seed=0, n=220, m=12, p=0.35):
+    rng = np.random.default_rng(seed)
+    return [[i for i in range(m) if rng.random() < p] for _ in range(n)]
+
+
+class _Preempted(Exception):
+    pass
+
+
+# ----------------------------------------------------------- parity: 4 ways
+def test_four_backends_identical_frequent_sets():
+    tx = _db(0)
+    want = mine_frequent(tx, 40)
+    assert len(want) > len([k for k in want if len(k) == 1])  # multi-level
+
+    assert dense_mine_frequent(DenseDB.encode(tx), 40) == want
+    assert streaming_mine_frequent(
+        StreamingDB.encode(tx, chunk_rows=32), 40) == want
+
+    import jax
+    from repro.mining import ItemVocab, encode_bitmap
+    vocab = ItemVocab.from_transactions(tx)
+    bits = encode_bitmap(tx, vocab)
+    w = np.ones((len(tx), 1), np.int32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert DistributedMiner(mesh).mine_frequent(bits, w, vocab, 40) == want
+
+    store = VersionedDB(tx[:150], merge_ratio=2.0)  # keep the delta resident
+    store.append(tx[150:])               # delta segment live: composed sweep
+    assert store.delta_rows > 0
+    assert versioned_mine_frequent(store, 40) == want
+
+    # the driver called directly over a backend is the same function
+    assert mine_frequent_backend(DenseBackend(DenseDB.encode(tx)), 40) == want
+    assert mine_frequent_backend(VersionedCountBackend(store), 40) == want
+
+
+def test_parity_with_class_column():
+    rng = np.random.default_rng(1)
+    tx = _db(1, n=260, m=10, p=0.4)
+    y = [int(rng.random() < 0.3) for _ in tx]
+    rare = [t for t, c in zip(tx, y) if c == 1]
+    want = mine_frequent(rare, 12)
+
+    ddb = DenseDB.encode(tx, classes=y, n_classes=2)
+    assert dense_mine_frequent(ddb, 12, class_column=1) == want
+    sdb = StreamingDB.encode(tx, classes=y, n_classes=2, chunk_rows=32)
+    assert streaming_mine_frequent(sdb, 12, class_column=1) == want
+
+    import jax
+    from repro.mining import ItemVocab, class_weights, encode_bitmap
+    vocab = ItemVocab.from_transactions(tx)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    got = DistributedMiner(mesh).mine_frequent(
+        encode_bitmap(tx, vocab), class_weights(y, 2), vocab, 12,
+        class_column=1)
+    assert got == want
+
+    store = VersionedDB(tx, classes=y, n_classes=2)
+    assert versioned_mine_frequent(store, 12, class_column=1) == want
+
+
+def test_level1_shortcut_identical_and_guarded():
+    tx = _db(2)
+    ddb = DenseDB.encode(tx)
+    via_shortcut = mine_frequent_backend(DenseBackend(ddb), 40)
+    via_engine = mine_frequent_backend(DenseBackend(ddb), 40,
+                                       level1_shortcut=False)
+    assert via_shortcut == via_engine == mine_frequent(tx, 40)
+    # a backend without the shortcut refuses a forced request
+    sdb = StreamingDB.encode(tx, chunk_rows=64)
+    with pytest.raises(ValueError):
+        mine_frequent_backend(StreamingBackend(sdb), 40, level1_shortcut=True)
+
+
+def test_on_level_hook_reports_levels():
+    tx = _db(3)
+    seen = []
+    got = mine_frequent_backend(
+        DenseBackend(DenseDB.encode(tx)), 40,
+        on_level=lambda lvl, n_cands, n_freq: seen.append(
+            (lvl, n_cands, n_freq)))
+    assert [lvl for lvl, _, _ in seen] == list(range(1, len(seen) + 1))
+    for lvl, n_cands, n_freq in seen:
+        assert n_freq == len([k for k in got if len(k) == lvl]) <= n_cands
+
+
+# ------------------------------------------------- kill/resume: dense backend
+class _CountingDense(DenseBackend):
+    def __init__(self, db, **kw):
+        super().__init__(db, **kw)
+        self.launches = 0
+
+    def counts(self, masks, *, start_chunk=0, init=None, on_chunk=None):
+        if start_chunk < self.n_count_chunks:
+            self.launches += 1
+        return super().counts(masks, start_chunk=start_chunk, init=init,
+                              on_chunk=on_chunk)
+
+
+def test_dense_backend_mid_level_kill_resume(tmp_path):
+    tx = _db(4, n=300, m=9, p=0.5)
+    want = mine_frequent(tx, 45)
+    assert max(len(k) for k in want) >= 3  # needs a level after the kill
+
+    ddb = DenseDB.encode(tx)
+    ckpt = MiningCheckpoint(str(tmp_path / "dense.json"))
+    calls = []
+
+    def die_at_level_2(level, chunk):
+        calls.append((level, chunk))
+        if level == 2:
+            raise _Preempted()
+
+    with pytest.raises(_Preempted):
+        mine_frequent_backend(_CountingDense(ddb), 45, checkpoint=ckpt,
+                              on_chunk=die_at_level_2)
+    # durable partial: level 2 fully counted (single chunk), not yet absorbed
+    state = json.load(open(str(tmp_path / "dense.json")))
+    assert state["level"] == 1
+    assert state["partial"]["level"] == 2
+    assert state["partial"]["next_chunk"] == 1
+    assert state["partial"]["backend"] == "dense"
+
+    resumed = []
+    backend = _CountingDense(ddb)
+    got = mine_frequent_backend(backend, 45, checkpoint=ckpt,
+                                on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == want
+    assert resumed[0][0] == 3              # level 2 absorbed from the partial
+    # level 1 came from the column-sum shortcut, level 2 from the saved
+    # accumulator: every launch of the resumed run is level >= 3
+    assert backend.launches == len(resumed)
+
+
+def test_distributed_level_resume_skips_counted_levels(tmp_path):
+    import jax
+    from repro.mining import ItemVocab, encode_bitmap
+
+    tx = _db(5)
+    want = mine_frequent(tx, 40)
+    vocab = ItemVocab.from_transactions(tx)
+    bits = encode_bitmap(tx, vocab)
+    w = np.ones((len(tx), 1), np.int32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ckpt = MiningCheckpoint(str(tmp_path / "dist.json"))
+
+    class _Counting(DistributedMiner):
+        n_calls = 0
+
+        def counts(self, *a, **kw):
+            _Counting.n_calls += 1
+            return super().counts(*a, **kw)
+
+    _Counting(mesh, checkpoint=ckpt).mine_frequent(bits, w, vocab, 40,
+                                                   max_len=2)
+    first = _Counting.n_calls
+    got = _Counting(mesh, checkpoint=ckpt).mine_frequent(bits, w, vocab, 40)
+    assert got == want
+    # the resumed run launched strictly fewer levels than a fresh run would
+    assert _Counting.n_calls - first < first + 1
+
+
+# --------------------------------------------- kill/resume: versioned backend
+def test_versioned_backend_mid_level_kill_resume(tmp_path):
+    tx = _db(6, n=260, m=10, p=0.4)
+    store = VersionedDB(tx[:200], streaming=True, chunk_rows=32,
+                        merge_ratio=2.0)
+    store.append(tx[200:])
+    assert store.delta_rows > 0            # base chunks + one delta chunk
+    backend = VersionedCountBackend(store)
+    assert backend.n_count_chunks == store.base.n_chunks + 1
+    want = mine_frequent(tx, 40)
+    assert versioned_mine_frequent(store, 40) == want
+
+    ckpt = MiningCheckpoint(str(tmp_path / "versioned.json"))
+    calls = []
+
+    def die_mid_level_2(level, chunk):
+        calls.append((level, chunk))
+        if level == 2 and chunk == 2:
+            raise _Preempted()             # mid base sweep of level 2
+
+    with pytest.raises(_Preempted):
+        versioned_mine_frequent(store, 40, checkpoint=ckpt,
+                                on_chunk=die_mid_level_2)
+    state = json.load(open(str(tmp_path / "versioned.json")))
+    assert state["partial"]["level"] == 2
+    assert state["partial"]["next_chunk"] == 3
+    assert state["partial"]["version"] == store.version
+    assert state["meta"]["version"] == store.version
+
+    resumed = []
+    got = versioned_mine_frequent(
+        store, 40, checkpoint=ckpt,
+        on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == want
+    assert resumed[0] == (2, 3)            # resumed mid-level, chunk 3
+
+
+def test_versioned_checkpoint_discarded_after_append(tmp_path):
+    tx = _db(7, n=200, m=10, p=0.35)
+    store = VersionedDB(tx)
+    ckpt = MiningCheckpoint(str(tmp_path / "stale.json"))
+    old = versioned_mine_frequent(store, 30, checkpoint=ckpt)
+    assert old == mine_frequent(tx, 30)
+
+    extra = _db(8, n=120, m=10, p=0.6)     # denser rows: counts shift
+    store.append(extra)
+    got = versioned_mine_frequent(store, 30, checkpoint=ckpt)
+    want = mine_frequent(tx + extra, 30)
+    assert got == want                     # stale version state NOT reused
+    assert got != old                      # and the answer genuinely moved
+
+
+def test_count_server_mine_resumable_over_streaming_store(tmp_path):
+    tx = _db(9, n=300, m=10, p=0.4)
+    theta = 0.18
+    fresh = CountServer(tx, streaming=True, chunk_rows=32)
+    want = fresh.mine(theta)
+    baseline_launches = fresh.store.kernel_launches
+
+    srv = CountServer(tx, streaming=True, chunk_rows=32)
+    mc = ceil_count(theta * srv.store.n_rows)
+    ckpt = MiningCheckpoint(str(tmp_path / "server.json"))
+    calls = []
+
+    def die_mid_mine(level, chunk):
+        calls.append((level, chunk))
+        if len(calls) == srv.store.base.n_chunks + 2:
+            raise _Preempted()             # 2 chunks into level 2
+
+    with pytest.raises(_Preempted):
+        versioned_mine_frequent(srv.store, mc, checkpoint=ckpt,
+                                on_chunk=die_mid_mine)
+    killed_launches = srv.store.kernel_launches
+
+    got = srv.mine(theta, checkpoint=ckpt)   # the server bootstrap, resumed
+    assert got == want
+    assert srv.frequent == want              # incremental maintenance armed
+    resumed_launches = srv.store.kernel_launches - killed_launches
+    assert resumed_launches < baseline_launches  # skipped completed chunks
+
+    # maintenance keeps working after a resumed bootstrap
+    inc = _db(10, n=60, m=10, p=0.4)
+    srv.append(inc)
+    assert srv.frequent == {
+        k: v for k, v in
+        mine_frequent(tx + inc, ceil_count(theta * (len(tx) + len(inc)))).items()
+    }
+
+
+# ------------------------------------------------------- consolidation check
+def test_exactly_one_engine_level_loop():
+    """The four engine entry points are shims: outside the paper-faithful
+    host baselines in core/, only the driver references apriori_gen."""
+    src = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+    offenders = sorted(
+        p.relative_to(src).as_posix() for p in src.rglob("*.py")
+        if "apriori_gen" in p.read_text()
+        and not p.relative_to(src).as_posix().startswith("core/"))
+    assert offenders == ["mining/driver.py"]

@@ -248,6 +248,67 @@ def test_cache_hit_miss_lru_and_purge():
     assert len(c) == 1 and c.get((3,), 1) is not None
 
 
+def test_append_survives_compaction_failure():
+    """Compaction is an optimization: if it dies, the append stays committed
+    and the store keeps serving exact composed base+delta counts (an escaping
+    error would look like a rejected batch and invite a double-count retry)."""
+    rng = np.random.default_rng(55)
+    tx = _db(rng, 80, 8)
+    store = VersionedDB(tx, merge_ratio=0.01)   # any append triggers compact
+
+    def boom():
+        raise MemoryError("simulated compactor OOM")
+
+    store.compact = boom
+    extra = _db(rng, 40, 8)
+    v = store.append(extra)                     # must NOT raise
+    assert v == 1 and store.delta_rows > 0
+    assert store.stats()["failed_compactions"] == 1
+    probes = [(0,), (1, 2)]
+    np.testing.assert_array_equal(
+        store.counts(probes), _fresh_counts(tx + extra, None, 1, probes))
+
+
+def test_cache_byte_budget_eviction_and_stats():
+    row = np.arange(4, dtype=np.int32)        # 16 bytes per entry
+    c = CountCache(capacity=1000, max_bytes=3 * row.nbytes)
+    for i in range(3):
+        c.put((i,), 0, row)
+    assert len(c) == 3 and c.nbytes == 3 * row.nbytes
+    assert c.stats()["bytes"] == 3 * row.nbytes
+    assert c.stats()["max_bytes"] == 3 * row.nbytes
+    c.get((0,), 0)                            # (0,) now most-recent
+    c.put((3,), 0, row)                       # over budget: evicts LRU (1,)
+    assert len(c) == 3 and c.evictions == 1
+    assert c.get((1,), 0) is None and c.get((0,), 0) is not None
+    # replacing an entry re-accounts its bytes instead of double-counting
+    c.put((0,), 0, row)
+    assert c.nbytes == 3 * row.nbytes
+    # purge updates the byte ledger too
+    c.put((9,), 1, row)
+    c.purge_stale(current_version=1)
+    assert len(c) == 1 and c.nbytes == row.nbytes
+    # an entry bigger than the whole budget cannot be admitted
+    tight = CountCache(capacity=10, max_bytes=8)
+    tight.put((1,), 0, row)
+    assert len(tight) == 0 and tight.nbytes == 0
+    with pytest.raises(ValueError):
+        CountCache(capacity=10, max_bytes=0)
+
+
+def test_server_cache_bytes_budget():
+    rng = np.random.default_rng(33)
+    tx = _db(rng, 100, 10)
+    srv = CountServer(tx, cache_bytes=4 * 4)  # room for four 1-class rows
+    srv.query([(i,) for i in range(8)])
+    assert len(srv.cache) == 4                # LRU kept only the budget
+    assert srv.cache.nbytes <= 16
+    assert srv.stats()["cache"]["bytes"] <= 16
+    # still exact: evicted probes recount on the engine
+    np.testing.assert_array_equal(
+        srv.query([(0,)]), _fresh_counts(tx, None, 1, [(0,)]))
+
+
 def test_cache_invalidation_after_append_serves_fresh_counts():
     rng = np.random.default_rng(3)
     tx = _db(rng, 120, 8)
