@@ -10,6 +10,7 @@ scaling — distributed engine strong-scaling on an 8-device host mesh
 stream  — streaming out-of-core sweep vs single-pass dense counting
 serve   — micro-batched count serving vs per-query launches, cold/warm cache
 mine    — unified level-wise mining driver vs the legacy per-engine loops
+shard   — sharded-store throughput (1/2/4/8 shards) + async flush latency
 """
 import argparse
 import sys
@@ -19,7 +20,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig5", "fig6", "kernel", "scaling", "stream",
-                             "serve", "mine"])
+                             "serve", "mine", "shard"])
     args = ap.parse_args()
 
     from .common import emit
@@ -46,6 +47,9 @@ def main() -> None:
     if args.only in (None, "mine"):
         from . import mine_loop
         suites["mine"] = mine_loop.run
+    if args.only in (None, "shard"):
+        from . import shard_serve
+        suites["shard"] = shard_serve.run
 
     print("name,us_per_call,derived")
     ok = True

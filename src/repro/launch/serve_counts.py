@@ -9,6 +9,13 @@ itemset-count queries from simulated clients — with optional mid-run appends
 (version bumps + cache invalidation) and ``--theta`` incremental re-mining.
 ``--verify`` cross-checks every distinct served key against a fresh dense
 encode of the full history at the final version (bit-identical or it dies).
+
+``--shards N`` row-partitions the store over N ``VersionedDB`` shards
+(``--mesh-data D`` additionally lays them out over a D-device host mesh —
+needs ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` or real
+devices).  ``--async-flush`` serves through the background flush loop
+(``--max-delay-ms`` / ``--min-batch`` triggers): requests are submitted as
+futures and the flush-latency distribution is reported at the end.
 """
 import argparse
 import time
@@ -40,6 +47,14 @@ def main() -> None:
     ap.add_argument("--streaming", action="store_true",
                     help="force the host-resident streaming backend")
     ap.add_argument("--chunk-rows", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=None,
+                    help="row-partition the store over N shards")
+    ap.add_argument("--mesh-data", type=int, default=None,
+                    help="lay the shards over a D-device host mesh")
+    ap.add_argument("--async-flush", action="store_true",
+                    help="serve through the background flush loop")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--min-batch", type=int, default=8)
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -49,12 +64,27 @@ def main() -> None:
     from ..data import bernoulli_db
     from ..serve import CountServer
 
+    mesh = None
+    if args.mesh_data is not None:
+        import jax
+
+        if args.shards is None:
+            raise SystemExit("--mesh-data requires --shards")
+        if len(jax.devices()) < args.mesh_data:
+            raise SystemExit(
+                f"--mesh-data {args.mesh_data} needs that many devices "
+                f"(have {len(jax.devices())}); set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.mesh_data}")
+        mesh = jax.make_mesh((args.mesh_data,), ("data",))
+
     tx, y = bernoulli_db(args.rows, args.items, args.p_x, args.p_y, args.seed)
     server = CountServer(
         tx, classes=list(y), use_kernel=True,
         streaming=True if args.streaming else None,
         chunk_rows=args.chunk_rows, cache=not args.no_cache,
-        cache_size=args.cache_size, block_k=args.block_k)
+        cache_size=args.cache_size, block_k=args.block_k,
+        shards=args.shards, mesh=mesh, async_flush=args.async_flush,
+        max_delay_ms=args.max_delay_ms, min_batch=args.min_batch)
     st = server.store
     print(f"resident: {st.resident} DB, {st.base_rows} unique rows "
           f"(of {st.n_rows}), {st.vocab.size} items, v{st.version}")
@@ -93,19 +123,36 @@ def main() -> None:
             if args.theta is not None:
                 msg += f", frequent set -> {len(server.frequent)}"
             print(msg)
+        t0 = time.time()
+        futures = []
         for b in range(args.batch):
             client = f"client-{(rnd * args.batch + b) % args.clients}"
             picks = rng.integers(0, len(pool), args.targets_per_query)
-            server.submit(client, [pool[i] for i in picks])
+            request = [pool[i] for i in picks]
+            if args.async_flush:
+                futures.append(server.submit_async(client, request))
+            else:
+                server.submit(client, request)
             n_queries += args.targets_per_query
-        t0 = time.time()
-        server.flush()
+        if args.async_flush:
+            for fut in futures:
+                fut.result(timeout=60)   # background loop answers the round
+        else:
+            server.flush()
         t_serve += time.time() - t0
+    server.close()                        # drains any still-pending tickets
 
     us_q = 1e6 * t_serve / max(1, n_queries)
-    print(f"served {n_queries} queries in {args.rounds} flushes: "
+    print(f"served {n_queries} queries in {args.rounds} rounds: "
           f"{us_q:.1f} us/query, {n_queries / max(t_serve, 1e-9):,.0f} q/s")
     s = server.stats()
+    if s["async"] is not None:
+        a = s["async"]
+        lat = a["flush_latency_ms"]
+        print(f"async: {a['flushes']} flushes {a['by_trigger']}, "
+              f"{a['flush_errors']} errors, flush latency "
+              f"p50={lat['p50']:.1f}ms p95={lat['p95']:.1f}ms "
+              f"max={lat['max']:.1f}ms (budget {a['max_delay_ms']:.0f}ms)")
     cache = s["cache"]
     cache_msg = ("cache off" if cache is None else
                  f"cache hit rate {cache['hit_rate']:.2f} "

@@ -1,16 +1,22 @@
 # Online count-serving subsystem: a versioned resident encoded DB answering
 # micro-batched itemset-count queries (the paper's "count of a given large
 # list of itemsets" contract as a serving workload), with an
-# (itemset, version)-keyed LRU result cache and §5.2 incremental re-mining.
+# (itemset, version)-keyed LRU result cache, §5.2 incremental re-mining, a
+# sharded store spanning a device mesh (exact all-reduced counts), and a
+# deadline/occupancy-triggered background flush loop.
+from .async_loop import AsyncFlusher, CountFuture
 from .batcher import (BatchPlan, MicroBatcher, QueryRequest, build_masks,
                       canonical_itemset)
 from .cache import CountCache
 from .service import (CountServer, MiningRefreshError,
                       versioned_mine_frequent)
-from .store import VersionedCountBackend, VersionedDB
+from .shard import ShardedCountBackend, ShardedDB
+from .store import VersionedCountBackend, VersionedDB, check_class_labels
 
 __all__ = [
-    "BatchPlan", "MicroBatcher", "QueryRequest", "build_masks",
-    "canonical_itemset", "CountCache", "CountServer", "MiningRefreshError",
-    "versioned_mine_frequent", "VersionedCountBackend", "VersionedDB",
+    "AsyncFlusher", "BatchPlan", "CountFuture", "MicroBatcher",
+    "QueryRequest", "build_masks", "canonical_itemset", "CountCache",
+    "CountServer", "MiningRefreshError", "versioned_mine_frequent",
+    "ShardedCountBackend", "ShardedDB", "VersionedCountBackend",
+    "VersionedDB", "check_class_labels",
 ]

@@ -102,8 +102,16 @@ class MicroBatcher:
     def restore(self, requests: List[QueryRequest]) -> None:
         """Re-queue a taken plan's requests (failed flush): tickets stay
         answerable by a retry.  Requests go back at the FRONT in their
-        original order; submit-time stats are untouched (a re-take recounts
-        dedups, which is informational only)."""
+        original order, and the ``n_deduped`` increments their ``take()``
+        made are rolled back — a retried flush re-takes the same requests
+        and would otherwise double-count every dedup, skewing ``stats()``
+        after any retry.  Submit-time stats are untouched."""
+        # take() incremented n_deduped once per non-first occurrence of a key
+        # within the drained set: total keys minus distinct keys, independent
+        # of request order — exactly the amount a re-take will add again
+        total = sum(len(r.keys) for r in requests)
+        distinct = len({key for r in requests for key in r.keys})
+        self.n_deduped -= total - distinct
         self._pending = list(requests) + self._pending
 
     def stats(self) -> dict:

@@ -12,6 +12,11 @@ knob when row width varies (multi-class stores) or when the cache shares a
 host-memory budget with a streaming-resident DB.  Eviction is LRU under
 whichever budget is exceeded.
 
+Admission rule: an entry larger than ``max_bytes`` on its own is REJECTED up
+front (counted in ``oversized_rejects``), before any resident entry is
+touched — admitting it would evict the entire warm working set only to drop
+the oversized entry itself once the budget check ran.
+
 A hit returns a defensive copy: cached rows are immutable serving results,
 never views into a caller's buffer.
 """
@@ -30,8 +35,8 @@ class CountCache:
 
     ``capacity`` caps the entry count; ``max_bytes`` (None = unbounded)
     additionally caps the summed ``nbytes`` of the cached rows.  An entry
-    larger than ``max_bytes`` on its own cannot be admitted (it is evicted
-    immediately, leaving the cache empty) — the budget is a hard ceiling.
+    larger than ``max_bytes`` on its own is rejected at admission without
+    disturbing resident entries — the budget is a hard ceiling.
     """
 
     def __init__(self, capacity: int = 65536,
@@ -47,6 +52,7 @@ class CountCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.oversized_rejects = 0
 
     def __len__(self) -> int:
         return len(self._d)
@@ -72,10 +78,16 @@ class CountCache:
 
     def put(self, key: Key, version: int, counts: np.ndarray) -> None:
         k = (key, version)
+        arr = np.array(counts, np.int32, copy=True)
+        if self.max_bytes is not None and arr.nbytes > self.max_bytes:
+            # an entry that can never fit must not touch resident entries:
+            # admitting it first would evict the whole warm set before the
+            # budget loop finally dropped the oversized entry itself
+            self.oversized_rejects += 1
+            return
         old = self._d.get(k)
         if old is not None:
             self._bytes -= old.nbytes
-        arr = np.array(counts, np.int32, copy=True)
         self._d[k] = arr
         self._bytes += arr.nbytes
         self._d.move_to_end(k)
@@ -102,4 +114,5 @@ class CountCache:
                 "bytes": self._bytes, "max_bytes": self.max_bytes,
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
+                "oversized_rejects": self.oversized_rejects,
                 "hit_rate": round(self.hit_rate, 4)}

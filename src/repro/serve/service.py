@@ -1,15 +1,23 @@
-"""The GFP count server: synchronous micro-batched count serving.
+"""The GFP count server: micro-batched count serving, sync or async/sharded.
 
 ``CountServer`` ties the serving subsystem together:
 
   * :class:`~repro.serve.store.VersionedDB` — the resident encoded DB
-    (device-dense or host-streaming by size) with versioned appends;
+    (device-dense or host-streaming by size) with versioned appends — or,
+    with ``shards=``, a :class:`~repro.serve.shard.ShardedDB` spanning
+    row-partitioned shards (optionally laid out over a device mesh), counts
+    all-reduced exactly;
   * :class:`~repro.serve.batcher.MicroBatcher` — ``submit()`` queues
     (client_id, itemsets) requests, ``flush()`` answers them all with ONE
     composed counting pass (cross-client deduped, block_k-padded);
   * :class:`~repro.serve.cache.CountCache` — (itemset, version)-keyed LRU so
     repeated hot queries skip the device entirely; ``append`` invalidates by
-    bumping the version.
+    bumping the version;
+  * with ``async_flush=True``, an :class:`~repro.serve.async_loop.AsyncFlusher`
+    — ``submit_async()`` returns a future, a background thread flushes on
+    occupancy (``min_batch``) or deadline (``max_delay_ms``), and ``close()``
+    drains every pending ticket.  All state-touching operations then
+    serialize behind one re-entrant lock.
 
 Served counts are EXACT: every row equals a fresh ``dense_gfp_counts`` /
 brute-force run over the full transaction history at the same version.
@@ -23,14 +31,19 @@ FP-tree walks.
 """
 from __future__ import annotations
 
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+import contextlib
+import threading
+import time
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from ..core.fpgrowth import mine_frequent
 from ..core.incremental import ceil_count, incremental_candidates
+from .async_loop import AsyncFlusher, CountFuture
 from .batcher import MicroBatcher, build_masks, canonical_itemset
 from .cache import CountCache
+from .shard import ShardedCountBackend, ShardedDB
 from .store import VersionedDB
 
 Item = Hashable
@@ -54,7 +67,7 @@ class MiningRefreshError(RuntimeError):
 
 
 def versioned_mine_frequent(
-    store: VersionedDB,
+    store: Union[VersionedDB, ShardedDB],
     min_count: float,
     *,
     class_column: Optional[int] = None,
@@ -62,26 +75,32 @@ def versioned_mine_frequent(
     checkpoint=None,                 # Optional[MiningCheckpoint]
     on_chunk=None,
 ) -> Dict[Key, int]:
-    """Level-synchronous exact mining over a :class:`VersionedDB` — a shim
-    over the unified driver (``mining/driver.py``) with the store-composed
-    :class:`~repro.serve.store.VersionedCountBackend`: the same contract as
+    """Level-synchronous exact mining over a :class:`VersionedDB` (or a
+    :class:`~repro.serve.shard.ShardedDB`) — a shim over the unified driver
+    (``mining/driver.py``) with the store-composed
+    :class:`~repro.serve.store.VersionedCountBackend` (resp.
+    :class:`~repro.serve.shard.ShardedCountBackend`): the same contract as
     ``dense_mine_frequent`` but counting through the store's composed
     base+delta sweep, so it is correct mid-append without compaction.
 
     With a ``checkpoint``, progress is durable at the store's chunk
-    granularity (base chunks + delta chunk) and PINNED to the store version:
-    a killed mine resumes mid-level at the same version, while a resume after
-    an ``append`` discards the stale state and restarts cleanly."""
+    granularity (base chunks + delta chunk, or one chunk per shard) and
+    PINNED to the store version: a killed mine resumes mid-level at the same
+    version, while a resume after an ``append`` discards the stale state and
+    restarts cleanly."""
     from ..mining.driver import mine_frequent as _driver_mine
     from .store import VersionedCountBackend
 
-    return _driver_mine(VersionedCountBackend(store), min_count,
+    backend = (ShardedCountBackend(store) if isinstance(store, ShardedDB)
+               else VersionedCountBackend(store))
+    return _driver_mine(backend, min_count,
                         class_column=class_column, max_len=max_len,
                         checkpoint=checkpoint, on_chunk=on_chunk)
 
 
 class CountServer:
-    """Synchronous driver loop: ``submit`` / ``flush`` / ``append`` / ``stats``."""
+    """Driver loop: ``submit`` / ``flush`` / ``append`` / ``stats`` — plus
+    ``submit_async`` / ``close`` when ``async_flush`` is on."""
 
     def __init__(
         self,
@@ -97,11 +116,25 @@ class CountServer:
         cache: bool = True,
         block_k: int = 256,
         merge_ratio: float = 0.25,
+        shards: Optional[int] = None,
+        mesh=None,
+        async_flush: bool = False,
+        max_delay_ms: float = 5.0,
+        min_batch: int = 8,
     ):
-        self.store = VersionedDB(
-            transactions, classes=classes, n_classes=n_classes,
-            use_kernel=use_kernel, streaming=streaming, chunk_rows=chunk_rows,
-            merge_ratio=merge_ratio)
+        if shards is not None:
+            self.store: Union[VersionedDB, ShardedDB] = ShardedDB(
+                transactions, classes=classes, n_classes=n_classes,
+                n_shards=shards, mesh=mesh, use_kernel=use_kernel,
+                streaming=streaming, chunk_rows=chunk_rows,
+                merge_ratio=merge_ratio)
+        elif mesh is not None:
+            raise ValueError("mesh= requires shards=")
+        else:
+            self.store = VersionedDB(
+                transactions, classes=classes, n_classes=n_classes,
+                use_kernel=use_kernel, streaming=streaming,
+                chunk_rows=chunk_rows, merge_ratio=merge_ratio)
         self.batcher = MicroBatcher(block_k=block_k)
         self.cache: Optional[CountCache] = \
             CountCache(cache_size, max_bytes=cache_bytes) if cache else None
@@ -109,12 +142,43 @@ class CountServer:
         self.n_queries_served = 0
         self._theta: Optional[float] = None
         self._frequent: Dict[Key, int] = {}
+        # every state-touching op serializes behind ONE re-entrant lock when
+        # a background flusher can race it; sync-only servers pay nothing
+        self._lock = (threading.RLock() if async_flush
+                      else contextlib.nullcontext())
+        self._flusher: Optional[AsyncFlusher] = (
+            AsyncFlusher(self, max_delay_ms=max_delay_ms,
+                         min_batch=min_batch) if async_flush else None)
 
     # -- query path -----------------------------------------------------------
     def submit(self, client_id: str,
                itemsets: Sequence[Sequence[Item]]) -> int:
         """Queue one client request; returns the ticket ``flush()`` keys on."""
-        return self.batcher.submit(client_id, itemsets)
+        with self._lock:
+            return self.batcher.submit(client_id, itemsets)
+
+    def submit_async(self, client_id: str,
+                     itemsets: Sequence[Sequence[Item]]) -> CountFuture:
+        """Queue one request on the background flush loop; returns a
+        :class:`~repro.serve.async_loop.CountFuture` whose ``result()``
+        blocks until an occupancy-/deadline-triggered (or explicit) flush
+        answers the ticket.  Requires ``async_flush=True``."""
+        if self._flusher is None:
+            raise RuntimeError(
+                "submit_async requires CountServer(async_flush=True)")
+        return self._flusher.submit(client_id, itemsets)
+
+    def close(self) -> None:
+        """Stop the background flush loop (if any) and drain every pending
+        ticket.  The server stays usable synchronously afterwards."""
+        if self._flusher is not None:
+            self._flusher.close()
+
+    def __enter__(self) -> "CountServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def flush(self) -> Dict[int, np.ndarray]:
         """Answer every pending request with one composed counting pass.
@@ -122,8 +186,26 @@ class CountServer:
         Returns {ticket -> (len(itemsets), C) int32}, rows in each request's
         submission order.  Unique uncached targets are counted in ONE
         block_k-padded launch per resident segment; cached targets (same
-        itemset, same version) never touch the device.
+        itemset, same version) never touch the device.  Async-submitted
+        tickets in the batch have their futures fulfilled too, whoever
+        triggered the flush — and symmetrically, a synchronously submitted
+        ticket that a BACKGROUND flush drained is returned by the next
+        ``flush()`` call rather than dropped.
         """
+        with self._lock:
+            started = time.monotonic()
+            # _reason is set => this call IS the background/drain trigger,
+            # whose return value is discarded — only a manual caller can
+            # claim the stash of background-answered sync tickets
+            manual = self._flusher is None or self._flusher._reason is None
+            out = self._flush_impl()
+            if self._flusher is not None:
+                self._flusher._dispatch(out, started=started)
+                if manual:
+                    out.update(self._flusher.claim_unclaimed())
+            return out
+
+    def _flush_impl(self) -> Dict[int, np.ndarray]:
         plan = self.batcher.take()
         if not plan.requests:
             return {}
@@ -174,13 +256,14 @@ class CountServer:
         next ``flush()`` at whatever version is current then — an interleaved
         ``query()`` can neither orphan their tickets nor freeze their counts
         at an older version."""
-        keys = [canonical_itemset(s) for s in itemsets]
-        resolved = self._resolve(list(dict.fromkeys(keys)))
-        self.n_queries_served += len(keys)
-        if not keys:
-            return np.zeros((0, self.store.n_classes), np.int32)
-        return np.stack([resolved[k] for k in keys]).astype(np.int32,
-                                                            copy=False)
+        with self._lock:
+            keys = [canonical_itemset(s) for s in itemsets]
+            resolved = self._resolve(list(dict.fromkeys(keys)))
+            self.n_queries_served += len(keys)
+            if not keys:
+                return np.zeros((0, self.store.n_classes), np.int32)
+            return np.stack([resolved[k] for k in keys]).astype(np.int32,
+                                                                copy=False)
 
     # -- growth path ----------------------------------------------------------
     def append(self, transactions: Sequence[Sequence[Item]],
@@ -188,24 +271,26 @@ class CountServer:
         """Fold a new batch into the resident DB (version bump ⇒ cache
         invalidation) and, if mining is active, refresh the frequent set via
         the §5.2 guided recount on the engine."""
-        transactions = [list(t) for t in transactions]
-        old_version = self.store.version
-        version = self.store.append(transactions, classes=classes)
-        if version != old_version and self.cache is not None:
-            self.cache.purge_stale(version)   # every old-version row is dead
-        if self._theta is not None and transactions:
-            try:
-                self._refresh_frequent(transactions)
-            except Exception as e:
-                # §5.2 completeness needs the PREVIOUS exact frequent set;
-                # after a failed refresh that baseline is lost for the new
-                # version — serving the stale set would be silently wrong,
-                # so disarm and require a fresh mine().  The batch itself IS
-                # committed; MiningRefreshError tells the caller not to retry.
-                self._theta = None
-                self._frequent = {}
-                raise MiningRefreshError(version, e) from e
-        return version
+        with self._lock:
+            transactions = [list(t) for t in transactions]
+            old_version = self.store.version
+            version = self.store.append(transactions, classes=classes)
+            if version != old_version and self.cache is not None:
+                self.cache.purge_stale(version)  # every old-version row dead
+            if self._theta is not None and transactions:
+                try:
+                    self._refresh_frequent(transactions)
+                except Exception as e:
+                    # §5.2 completeness needs the PREVIOUS exact frequent
+                    # set; after a failed refresh that baseline is lost for
+                    # the new version — serving the stale set would be
+                    # silently wrong, so disarm and require a fresh mine().
+                    # The batch itself IS committed; MiningRefreshError tells
+                    # the caller not to retry.
+                    self._theta = None
+                    self._frequent = {}
+                    raise MiningRefreshError(version, e) from e
+            return version
 
     def mine(self, theta: float, *, checkpoint=None) -> Dict[Key, int]:
         """Bootstrap exact frequent-itemset mining at relative threshold
@@ -219,13 +304,14 @@ class CountServer:
         appends restarts the mine cleanly instead of serving stale levels."""
         if not (0.0 < theta <= 1.0):
             raise ValueError("theta in (0, 1]")
-        frequent = versioned_mine_frequent(
-            self.store, ceil_count(theta * self.store.n_rows),
-            checkpoint=checkpoint)
-        # commit only after the mine succeeds: a failed mine must not arm
-        # incremental maintenance over an empty/stale baseline
-        self._theta, self._frequent = theta, frequent
-        return dict(frequent)
+        with self._lock:
+            frequent = versioned_mine_frequent(
+                self.store, ceil_count(theta * self.store.n_rows),
+                checkpoint=checkpoint)
+            # commit only after the mine succeeds: a failed mine must not arm
+            # incremental maintenance over an empty/stale baseline
+            self._theta, self._frequent = theta, frequent
+            return dict(frequent)
 
     def _refresh_frequent(self, increment: List[List[Item]]) -> None:
         # Pigeonhole candidates (complete: combined-frequent ⇒ frequent in the
@@ -252,13 +338,17 @@ class CountServer:
 
     # -- introspection --------------------------------------------------------
     def stats(self) -> dict:
-        return {
-            "store": self.store.stats(),
-            "batcher": self.batcher.stats(),
-            "cache": self.cache.stats() if self.cache is not None else None,
-            "flushes": self.n_flushes,
-            "queries_served": self.n_queries_served,
-            "mining_theta": self._theta,
-            "frequent_itemsets": (len(self._frequent)
-                                  if self._theta is not None else None),
-        }
+        with self._lock:
+            return {
+                "store": self.store.stats(),
+                "batcher": self.batcher.stats(),
+                "cache": (self.cache.stats() if self.cache is not None
+                          else None),
+                "async": (self._flusher.stats() if self._flusher is not None
+                          else None),
+                "flushes": self.n_flushes,
+                "queries_served": self.n_queries_served,
+                "mining_theta": self._theta,
+                "frequent_itemsets": (len(self._frequent)
+                                      if self._theta is not None else None),
+            }

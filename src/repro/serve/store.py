@@ -21,6 +21,10 @@ technique of Danessh et al. 2010) instead of re-encoding per call:
 ``version`` is the cache key half of the serving cache (``serve.cache``): any
 append invalidates by construction, and pure compaction does NOT bump the
 version because it cannot change any count.
+
+``serve.shard.ShardedDB`` scales this store past one device: row-partitioned
+``VersionedDB`` shards behind one logical version, counts all-reduced — the
+same additivity argument that makes the base+delta composition below exact.
 """
 from __future__ import annotations
 
@@ -40,6 +44,34 @@ from ..mining.stream import (DEFAULT_STREAM_THRESHOLD_BYTES, StreamingDB,
 Item = Hashable
 
 
+def check_class_labels(classes: Optional[Sequence[int]],
+                       n_classes: Optional[int]) -> int:
+    """Validate class labels BEFORE any store state is touched; returns the
+    resolved ``n_classes``.
+
+    A negative label (or a label ≥ an explicitly passed ``n_classes``) must
+    raise the documented no-trace ``ValueError`` here, at the store boundary —
+    not deep inside ``class_weights`` after vocab/total bookkeeping has begun,
+    and never by scattering out of bounds or silently truncating a
+    non-integral label."""
+    if n_classes is not None and n_classes <= 0:
+        raise ValueError(f"n_classes must be positive, got {n_classes}")
+    if classes is not None and len(classes):
+        y = np.asarray(classes)
+        yi = y.astype(np.int64)
+        if not np.array_equal(yi, y):
+            raise ValueError("class labels must be integers")
+        lo, hi = int(yi.min()), int(yi.max())
+        if lo < 0:
+            raise ValueError(f"negative class label {lo}")
+        if n_classes is None:
+            n_classes = hi + 1
+        elif hi >= n_classes:
+            raise ValueError(
+                f"class label {hi} out of range for n_classes={n_classes}")
+    return n_classes or 1
+
+
 class VersionedDB:
     """Resident encoded bitmap + vocab with versioned incremental appends."""
 
@@ -56,9 +88,7 @@ class VersionedDB:
         stream_threshold_bytes: int = DEFAULT_STREAM_THRESHOLD_BYTES,
         merge_ratio: float = 0.25,
     ):
-        if classes is not None and n_classes is None:
-            n_classes = int(max(classes)) + 1 if len(classes) else 1
-        self.n_classes = n_classes or 1
+        self.n_classes = check_class_labels(classes, n_classes)
         self.use_kernel = use_kernel
         self.chunk_rows = chunk_rows
         self.merge_ratio = merge_ratio
@@ -175,8 +205,11 @@ class VersionedDB:
         transactions = [list(t) for t in transactions]
         if not transactions:
             return self.version
-        # encode + validate BEFORE touching any store state: a rejected batch
-        # must leave no trace (no vocab tail, no totals, no version bump)
+        # validate + encode BEFORE touching any store state: a rejected batch
+        # must leave no trace (no vocab tail, no totals, no version bump).
+        # Label-range validation comes first — the store's n_classes is fixed,
+        # so an out-of-range label can never be folded in
+        check_class_labels(classes, self.n_classes)
         vocab = extend_vocab(transactions, self.vocab)
         ub, uw = self._encode_batch(transactions, classes, vocab)
         totals = self._guard_totals(
@@ -293,15 +326,24 @@ class VersionedDB:
         the vocab count 0 (the paper's note: such targets never appear in the
         FP-tree), matching ``dense_gfp_counts``.  One unknown-target contract,
         shared with the flush path: ``build_masks`` + zeroing."""
-        from .batcher import build_masks
+        return counts_for_itemsets(self, itemsets)
 
-        if not len(itemsets):
-            return np.zeros((0, self.n_classes), np.int32)
-        masks, known = build_masks([tuple(s) for s in itemsets], self.vocab,
-                                   block_k=1)
-        out = self.counts_masks(masks)[:len(itemsets)]
-        out[~known] = 0
-        return out
+
+def counts_for_itemsets(store, itemsets: Sequence[Sequence[Item]]
+                        ) -> np.ndarray:
+    """The ONE raw-itemset counting contract over any serving store (a
+    ``VersionedDB`` or a ``ShardedDB``: anything with ``vocab`` /
+    ``n_classes`` / ``counts_masks``): encode under the store vocab, count,
+    and zero targets naming never-seen items — whose exact count is 0."""
+    from .batcher import build_masks
+
+    if not len(itemsets):
+        return np.zeros((0, store.n_classes), np.int32)
+    masks, known = build_masks([tuple(s) for s in itemsets], store.vocab,
+                               block_k=1)
+    out = np.array(store.counts_masks(masks)[:len(itemsets)], np.int32)
+    out[~known] = 0
+    return out
 
 
 class VersionedCountBackend(CountBackend):
@@ -413,4 +455,10 @@ class VersionedCountBackend(CountBackend):
             total = total + store._zero_oob(got, oob)
             if on_chunk is not None:
                 on_chunk(nb, total)
+        elif nb == 0 and start_chunk == 0 and on_chunk is not None:
+            # empty store: n_count_chunks still claims a 1-chunk grid, so the
+            # (trivially exact, all-zero) sweep must COMPLETE that chunk —
+            # otherwise a checkpointed mine records zero chunk progress
+            # against a claimed chunk and the partial never becomes resumable
+            on_chunk(0, total)
         return total

@@ -1,7 +1,10 @@
 """Serving subsystem: versioned resident DB exactness across appends, batcher
 cross-client dedup, (itemset, version) cache invalidation, engine-backed
-incremental re-mining parity with the host miner, and the served-counts ==
-dense_gfp_counts acceptance contract."""
+incremental re-mining parity with the host miner, the served-counts ==
+dense_gfp_counts acceptance contract, sharded-vs-single-device count parity,
+and the async background flush loop (occupancy/deadline triggers, clean
+close)."""
+import json
 import os
 import subprocess
 import sys
@@ -16,11 +19,17 @@ from repro.kernels.itemset_count import itemset_counts
 from repro.mining import (DenseDB, StreamingDB, dense_gfp_counts,
                           dense_mine_frequent, encode_targets, extend_vocab,
                           pad_words, ItemVocab)
-from repro.serve import (CountCache, CountServer, MicroBatcher, VersionedDB,
-                         build_masks, canonical_itemset,
-                         versioned_mine_frequent)
+from repro.mining.distributed import MiningCheckpoint
+from repro.serve import (CountCache, CountServer, MicroBatcher,
+                         ShardedCountBackend, ShardedDB,
+                         VersionedCountBackend, VersionedDB, build_masks,
+                         canonical_itemset, versioned_mine_frequent)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class _Preempted(Exception):
+    pass
 
 
 def _db(rng, rows, items, p=0.3):
@@ -532,6 +541,448 @@ def test_server_mining_failures_disarm_incremental_maintenance(monkeypatch):
     assert ei.value.version == srv.store.version  # batch WAS committed
     with pytest.raises(RuntimeError, match="mine"):
         srv.frequent                          # stale baseline disarmed
+
+
+# ------------------------------------------------- serving-path bug sweep
+def test_cache_oversized_put_rejected_without_eviction():
+    """Regression: a put larger than max_bytes used to evict EVERY resident
+    entry before the oversized entry itself was dropped — one oversized row
+    nuked a warm cache.  It must be rejected up front, counted separately."""
+    row = np.arange(4, dtype=np.int32)            # 16 bytes
+    c = CountCache(capacity=10, max_bytes=4 * row.nbytes)
+    for i in range(4):
+        c.put((i,), 0, row)
+    big = np.arange(64, dtype=np.int32)           # 256 bytes > budget
+    c.put((99,), 0, big)
+    assert len(c) == 4 and c.nbytes == 4 * row.nbytes   # warm set intact
+    assert c.evictions == 0
+    assert c.oversized_rejects == 1
+    assert c.stats()["oversized_rejects"] == 1
+    assert c.get((99,), 0) is None                # never admitted
+    for i in range(4):                            # every resident row hits
+        assert c.get((i,), 0) is not None
+    # replacing a resident key with an oversized value keeps the (still
+    # correct: same key+version = same counts) resident entry
+    c.put((0,), 0, big)
+    assert c.get((0,), 0) is not None and c.oversized_rejects == 2
+
+
+def test_batcher_restore_rolls_back_dedup_stats():
+    """Regression: a failed flush's restore() kept take()'s n_deduped
+    increments, so the re-take double-counted every dedup."""
+    b = MicroBatcher(block_k=8)
+    b.submit("a", [(1, 2), (2, 1), (3,)])         # (2,1) dedups onto (1,2)
+    b.submit("b", [(1, 2)])                       # cross-client dedup
+    plan = b.take()
+    assert b.n_deduped == 2
+    b.restore(plan.requests)
+    assert b.n_deduped == 0                       # rolled back exactly
+    b.take()
+    assert b.n_deduped == 2                       # retry counts once, not 4
+    assert b.stats()["requests"] == 2 and b.stats()["queries"] == 4
+
+
+def test_server_retried_flush_reports_exact_dedup_stats(monkeypatch):
+    rng = np.random.default_rng(20)
+    srv = CountServer(_db(rng, 60, 6), cache=False)
+    srv.submit("a", [(0, 1), (1, 0)])             # one in-request dedup
+    srv.submit("b", [(0, 1)])                     # one cross-client dedup
+    monkeypatch.setattr(srv.store, "counts_masks",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("device lost")))
+    with pytest.raises(RuntimeError, match="device lost"):
+        srv.flush()
+    assert srv.batcher.stats()["deduped"] == 0    # failed take rolled back
+    monkeypatch.undo()
+    srv.flush()
+    assert srv.batcher.stats()["deduped"] == 2    # exact after the retry
+
+
+def test_store_class_label_validation_no_trace():
+    """Regression: out-of-range labels must raise the documented no-trace
+    ValueError at the store boundary, for construction AND append."""
+    rng = np.random.default_rng(21)
+    tx = _db(rng, 40, 6)
+    with pytest.raises(ValueError, match="negative"):
+        VersionedDB(tx, classes=[-1] * len(tx))
+    with pytest.raises(ValueError, match="out of range"):
+        VersionedDB(tx, classes=[3] * len(tx), n_classes=2)
+    with pytest.raises(ValueError, match="n_classes"):
+        VersionedDB(tx, classes=[0] * len(tx), n_classes=-2)
+    with pytest.raises(ValueError, match="integer"):
+        VersionedDB(tx, classes=[0.5] * len(tx), n_classes=2)
+
+    y = [int(rng.random() < 0.5) for _ in tx]
+    db = VersionedDB(tx, classes=y, n_classes=2)
+    vocab_before, totals_before = db.vocab, db._class_totals.copy()
+    for bad in ([-1], [2], [0.5]):
+        with pytest.raises(ValueError):
+            db.append([[0, "new-item"]], classes=bad)
+    assert db.version == 0 and db.n_rows == len(tx)
+    assert db.vocab is vocab_before and "new-item" not in db.vocab
+    np.testing.assert_array_equal(db._class_totals, totals_before)
+    assert db.delta_rows == 0                     # no delta segment appeared
+
+    # the sharded store rejects with no trace on ANY shard either
+    sh = ShardedDB(tx, classes=y, n_classes=2, n_shards=2)
+    with pytest.raises(ValueError):
+        sh.append([[0, "new-item"]], classes=[5])
+    assert sh.version == 0 and "new-item" not in sh.vocab
+    assert all(s.version == 0 for s in sh.shards)
+    # length-mismatched labels rejected at construction (surplus labels
+    # would otherwise silently drop after widening n_classes; short lists
+    # would IndexError mid-partition)
+    with pytest.raises(ValueError, match="length"):
+        ShardedDB(tx, classes=y + [3], n_shards=2)
+    with pytest.raises(ValueError, match="length"):
+        ShardedDB(tx, classes=y[:-1], n_shards=2)
+    with pytest.raises(ValueError, match="length"):
+        sh.append([[0], [1]], classes=[0])
+
+
+def test_empty_store_chunk_accounting_and_kill_resume(tmp_path):
+    """Regression: an empty store claimed a 1-chunk grid but never fired
+    on_chunk, so a checkpointed mine recorded zero chunk progress — the
+    (trivially exact) sweep must complete its claimed chunk."""
+    store = VersionedDB(vocab=ItemVocab((0, 1, 2)))
+    backend = VersionedCountBackend(store)
+    assert backend.n_count_chunks == 1
+    fired = []
+    got = backend.counts(np.zeros((2, 1), np.uint32),
+                         on_chunk=lambda i, acc: fired.append(i))
+    assert fired == [0]                           # grid and progress agree
+    np.testing.assert_array_equal(got, 0)
+
+    ckpt = MiningCheckpoint(str(tmp_path / "empty.json"))
+
+    def die(level, chunk):
+        raise _Preempted()
+
+    with pytest.raises(_Preempted):
+        versioned_mine_frequent(store, 1, checkpoint=ckpt, on_chunk=die)
+    state = json.load(open(str(tmp_path / "empty.json")))
+    assert state["partial"]["next_chunk"] == 1    # == n_count_chunks
+    resumed = []
+    got = versioned_mine_frequent(store, 1, checkpoint=ckpt,
+                                  on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == {} and resumed == []            # level 1 resumed, no recount
+
+
+# ------------------------------------------------------------ sharded store
+def test_sharded_vs_single_device_parity_interleaved():
+    """Acceptance: sharded counts bit-identical to the single-device
+    VersionedDB at EVERY version across ≥3 interleaved append/flush rounds
+    (vocab-widening batches, live deltas, unknown-item probes)."""
+    rng = np.random.default_rng(30)
+    tx = _db(rng, 180, 10)
+    y = [int(rng.random() < 0.4) for _ in tx]
+    single = VersionedDB(tx, classes=y, n_classes=2, merge_ratio=1e9)
+    sharded = ShardedDB(tx, classes=y, n_classes=2, n_shards=3,
+                        merge_ratio=1e9)
+    assert sharded.n_rows == single.n_rows == len(tx)
+    probes = [(0, 1), (2,), (3, 7, 9), (11,), ("nope",), (0, 12)]
+    np.testing.assert_array_equal(single.counts(probes),
+                                  sharded.counts(probes))
+    history, classes = list(tx), list(y)
+    for step in range(1, 4):
+        batch = _db(rng, 50, 10 + step)           # widens the item universe
+        yb = [int(rng.random() < 0.4) for _ in batch]
+        assert single.append(batch, classes=yb) == step
+        assert sharded.append(batch, classes=yb) == step
+        history += batch
+        classes += yb
+        got = sharded.counts(probes)
+        np.testing.assert_array_equal(got, single.counts(probes))
+        np.testing.assert_array_equal(
+            got, _fresh_counts(history, classes, 2, probes))
+    assert sharded.delta_rows > 0                 # deltas genuinely in play
+    assert max(s.n_rows for s in sharded.shards) \
+        - min(s.n_rows for s in sharded.shards) <= len(batch)
+    sharded.compact()                             # counts unchanged
+    assert sharded.delta_rows == 0 and sharded.version == 3
+    np.testing.assert_array_equal(sharded.counts(probes),
+                                  single.counts(probes))
+    with pytest.raises(ValueError):
+        ShardedDB(tx, n_shards=0)
+
+
+def test_sharded_append_routes_to_least_loaded_shard():
+    rng = np.random.default_rng(31)
+    sh = ShardedDB(_db(rng, 90, 8), n_shards=3)
+    rows_before = [s.n_rows for s in sh.shards]
+    target = min(range(3), key=lambda i: rows_before[i])
+    sh.append(_db(rng, 10, 8))
+    rows_after = [s.n_rows for s in sh.shards]
+    assert rows_after[target] == rows_before[target] + 10
+    assert sum(rows_after) == sum(rows_before) + 10
+
+
+def test_sharded_mine_parity_kill_resume_and_stale_version(tmp_path):
+    rng = np.random.default_rng(32)
+    tx = _db(rng, 240, 10, p=0.4)
+    store = ShardedDB(tx, n_shards=3)
+    backend = ShardedCountBackend(store)
+    assert backend.n_count_chunks == 3            # one chunk per shard
+    want = mine_frequent(tx, 40)
+    assert versioned_mine_frequent(store, 40) == want
+
+    ckpt = MiningCheckpoint(str(tmp_path / "sharded.json"))
+
+    def die_mid_level_2(level, chunk):
+        if level == 2 and chunk == 1:
+            raise _Preempted()                    # mid shard sweep
+
+    with pytest.raises(_Preempted):
+        versioned_mine_frequent(store, 40, checkpoint=ckpt,
+                                on_chunk=die_mid_level_2)
+    state = json.load(open(str(tmp_path / "sharded.json")))
+    assert state["partial"]["level"] == 2
+    assert state["partial"]["next_chunk"] == 2
+    assert state["partial"]["n_shards"] == 3      # shard grid in signature
+    assert state["meta"] == {"version": 0, "n_shards": 3}
+
+    resumed = []
+    got = versioned_mine_frequent(
+        store, 40, checkpoint=ckpt,
+        on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == want
+    assert resumed[0] == (2, 2)                   # resumed at shard chunk 2
+
+    extra = _db(rng, 100, 10, p=0.6)              # denser: counts shift
+    store.append(extra)
+    got = versioned_mine_frequent(store, 40, checkpoint=ckpt)
+    assert got == mine_frequent(tx + extra, 40)   # stale checkpoint discarded
+
+
+def test_sharded_server_end_to_end(monkeypatch):
+    """CountServer(shards=): submit/flush/query/append/mine/frequent all run
+    unchanged over the sharded store, exactly."""
+    rng = np.random.default_rng(33)
+    tx = _db(rng, 200, 10, p=0.3)
+    y = [int(rng.random() < 0.4) for _ in tx]
+    srv = CountServer(tx, classes=y, shards=2, block_k=8)
+    plain = CountServer(tx, classes=y, block_k=8)
+    t1 = srv.submit("a", [(0, 1), (2,), (1, 0)])
+    res = srv.flush()
+    want = plain.query([(0, 1), (2,), (1, 0)])
+    np.testing.assert_array_equal(res[t1], want)
+
+    theta = 0.12
+    assert srv.mine(theta) == plain.mine(theta)
+    batch = _db(rng, 60, 12, p=0.3)
+    yb = [int(rng.random() < 0.4) for _ in batch]
+    srv.append(batch, classes=yb)
+    plain.append(batch, classes=yb)
+    assert srv.frequent == plain.frequent         # §5.2 maintenance parity
+    np.testing.assert_array_equal(srv.query([(0, 1), (11,)]),
+                                  plain.query([(0, 1), (11,)]))
+    with pytest.raises(ValueError, match="shards"):
+        CountServer(tx, mesh=object())
+
+
+# ------------------------------------------------------------- async flush
+def test_async_occupancy_and_deadline_triggers():
+    rng = np.random.default_rng(40)
+    tx = _db(rng, 80, 8)
+    srv = CountServer(tx, async_flush=True, max_delay_ms=40, min_batch=4)
+    try:
+        futs = [srv.submit_async(f"c{i}", [(0, 1), (2,)]) for i in range(4)]
+        results = [f.result(timeout=15) for f in futs]   # occupancy fires
+        want = _fresh_counts(tx, None, 1, [(0, 1), (2,)])
+        for got in results:
+            np.testing.assert_array_equal(got, want)
+        lone = srv.submit_async("lone", [(3,)])          # below min_batch
+        np.testing.assert_array_equal(lone.result(timeout=15),
+                                      _fresh_counts(tx, None, 1, [(3,)]))
+        st = srv.stats()["async"]
+        assert st["flushes"] >= 2 and st["pending_tickets"] == 0
+        assert st["by_trigger"]["deadline"] >= 1         # the lone ticket
+    finally:
+        srv.close()
+    assert srv.stats()["async"]["closed"]
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit_async("late", [(0,)])
+    # the server stays usable synchronously after close
+    np.testing.assert_array_equal(srv.query([(3,)]),
+                                  _fresh_counts(tx, None, 1, [(3,)]))
+
+
+def test_async_close_drains_pending_tickets():
+    """Acceptance: close() never orphans a submitted ticket — triggers that
+    would never fire (huge min_batch, long deadline) still get answered by
+    the close() drain."""
+    rng = np.random.default_rng(41)
+    tx = _db(rng, 60, 6)
+    srv = CountServer(tx, async_flush=True, max_delay_ms=60_000,
+                      min_batch=10_000)
+    futs = [srv.submit_async(f"c{i}", [(0,), (1, 2)]) for i in range(3)]
+    assert not any(f.done() for f in futs)
+    srv.close()
+    want = _fresh_counts(tx, None, 1, [(0,), (1, 2)])
+    for f in futs:
+        assert f.done()
+        np.testing.assert_array_equal(f.result(timeout=1), want)
+    assert srv.stats()["async"]["by_trigger"]["drain"] == 1
+
+
+def test_async_failed_flush_retries_then_answers():
+    rng = np.random.default_rng(42)
+    tx = _db(rng, 60, 6)
+    srv = CountServer(tx, cache=False, async_flush=True, max_delay_ms=30,
+                      min_batch=1)
+    calls = {"n": 0}
+    orig = srv.store.counts_masks
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient device loss")
+        return orig(*a, **k)
+
+    srv.store.counts_masks = flaky
+    try:
+        fut = srv.submit_async("a", [(0, 1)])
+        np.testing.assert_array_equal(fut.result(timeout=15),
+                                      _fresh_counts(tx, None, 1, [(0, 1)]))
+        assert srv.stats()["async"]["flush_errors"] >= 1
+    finally:
+        srv.close()
+
+
+def test_async_close_with_failing_store_raises_on_futures():
+    rng = np.random.default_rng(43)
+    tx = _db(rng, 40, 6)
+    srv = CountServer(tx, cache=False, async_flush=True, max_delay_ms=60_000,
+                      min_batch=10_000)
+    srv.store.counts_masks = \
+        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("dead device"))
+    fut = srv.submit_async("a", [(0,)])
+    with pytest.raises(RuntimeError, match="dead device"):
+        srv.close()
+    assert fut.done()
+    with pytest.raises(RuntimeError, match="dead device"):
+        fut.result(timeout=1)
+
+
+def test_async_background_flush_preserves_sync_tickets():
+    """Regression: a synchronously submitted ticket drained by a BACKGROUND
+    flush must not vanish — the next explicit flush() hands it back."""
+    rng = np.random.default_rng(44)
+    tx = _db(rng, 60, 6)
+    srv = CountServer(tx, async_flush=True, max_delay_ms=20, min_batch=2)
+    try:
+        t = srv.submit("sync", [(0, 1)])          # plain sync ticket
+        fut = srv.submit_async("async", [(2,)])   # fills min_batch: bg flush
+        fut.result(timeout=15)                    # ... drained BOTH tickets
+        assert srv.stats()["async"]["unclaimed_sync_tickets"] == 1
+        out = srv.flush()                         # sync ticket handed back
+        np.testing.assert_array_equal(
+            out[t], _fresh_counts(tx, None, 1, [(0, 1)]))
+        assert srv.stats()["async"]["unclaimed_sync_tickets"] == 0
+    finally:
+        srv.close()
+
+
+def test_async_future_result_is_a_private_copy():
+    """A manual flush() answering an async ticket returns the block to its
+    own caller too — the future must hold an independent copy."""
+    rng = np.random.default_rng(45)
+    tx = _db(rng, 50, 6)
+    srv = CountServer(tx, async_flush=True, max_delay_ms=60_000,
+                      min_batch=10_000)
+    try:
+        fut = srv.submit_async("a", [(0, 1)])
+        out = srv.flush()                     # manual flush answers it
+        out[fut.ticket][:] = -7               # flush caller mutates its rows
+        np.testing.assert_array_equal(fut.result(timeout=1),
+                                      _fresh_counts(tx, None, 1, [(0, 1)]))
+    finally:
+        srv.close()
+
+
+def test_submit_async_requires_async_flush():
+    srv = CountServer([[1, 2]])
+    with pytest.raises(RuntimeError, match="async_flush"):
+        srv.submit_async("a", [(1,)])
+
+
+# ------------------------------------------------------- sharded mesh path
+def test_sharded_mesh_single_device_parity():
+    """Mesh (1,) path runs in-process: the fused psum launch over the stacked
+    resident placement matches the host all-reduce loop bit-identically."""
+    import jax
+
+    rng = np.random.default_rng(50)
+    tx = _db(rng, 150, 40)
+    y = [int(rng.random() < 0.4) for _ in tx]
+    mesh = jax.make_mesh((1,), ("data",))
+    meshed = ShardedDB(tx, classes=y, n_classes=2, n_shards=2, mesh=mesh,
+                       merge_ratio=1e9)
+    hosted = ShardedDB(tx, classes=y, n_classes=2, n_shards=2,
+                       merge_ratio=1e9)
+    probes = [(0, 1), (2,), (3, 7, 39), (44,)]
+    np.testing.assert_array_equal(meshed.counts(probes),
+                                  hosted.counts(probes))
+    batch = [[int(a) for a in range(100, 125)] for _ in range(5)]  # widens W
+    meshed.append(batch, classes=[0] * 5)
+    hosted.append(batch, classes=[0] * 5)
+    probes += [(104,), (0, 104)]
+    got = meshed.counts(probes)
+    np.testing.assert_array_equal(got, hosted.counts(probes))
+    np.testing.assert_array_equal(
+        got, _fresh_counts(tx + batch, y + [0] * 5, 2, probes))
+    assert meshed.stats()["mesh"] == {"data": 1}
+
+
+MESH_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+from repro.core import mine_frequent
+from repro.serve import CountServer, ShardedDB, VersionedDB
+
+rng = np.random.default_rng(51)
+def _db(rows, items, p=0.3):
+    return [[int(a) for a in range(items) if rng.random() < p]
+            for _ in range(rows)]
+
+tx = _db(400, 40)
+y = [int(rng.random() < 0.4) for _ in tx]
+mesh = jax.make_mesh((4,), ("data",))
+single = VersionedDB(tx, classes=y, n_classes=2, merge_ratio=1e9)
+sharded = ShardedDB(tx, classes=y, n_classes=2, n_shards=4, mesh=mesh,
+                    merge_ratio=1e9)
+probes = [(0, 1), (2,), (3, 7, 39), (11,)]
+np.testing.assert_array_equal(single.counts(probes), sharded.counts(probes))
+for step in range(1, 4):                 # interleaved appends + queries
+    batch = _db(80, 40 + 30 * step)      # widens past word boundaries
+    yb = [int(rng.random() < 0.4) for _ in batch]
+    assert single.append(batch, classes=yb) == step
+    assert sharded.append(batch, classes=yb) == step
+    p2 = probes + [(41,), (0, 45)]
+    np.testing.assert_array_equal(single.counts(p2), sharded.counts(p2))
+
+srv = CountServer(tx, classes=y, shards=4, mesh=mesh)
+freq = srv.mine(0.15)
+from repro.core.incremental import ceil_count
+assert freq == mine_frequent(tx, ceil_count(0.15 * len(tx)))
+print(json.dumps({"ok": True, "launches": sharded.kernel_launches}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_mesh_multidevice_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", MESH_SHARD_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["launches"] > 0
 
 
 # ----------------------------------------------------------------- launcher

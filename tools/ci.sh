@@ -18,6 +18,11 @@ echo "=== serving smoke (count server submit/flush/append + verify) ==="
 python -m repro.launch.serve_counts --rows 2000 --items 24 --rounds 4 \
     --batch 16 --appends 1 --append-rows 300 --pool 64 --theta 0.08 --verify
 
+echo "=== shard-serve smoke (sharded store + async flush loop + verify) ==="
+python -m repro.launch.serve_counts --rows 2000 --items 24 --rounds 4 \
+    --batch 16 --appends 1 --append-rows 300 --pool 64 --shards 2 \
+    --async-flush --max-delay-ms 25 --theta 0.08 --verify
+
 echo "=== mine-loop smoke (cross-backend parity + driver bench sanity) ==="
 python -m pytest -q tests/test_mining_driver.py
 python -m benchmarks.mine_loop --smoke
@@ -30,3 +35,6 @@ python -m benchmarks.serve --json BENCH_serve.json
 
 echo "=== mining-loop perf record ==="
 python -m benchmarks.mine_loop --json BENCH_mine.json
+
+echo "=== shard-serve perf record ==="
+python -m benchmarks.shard_serve --json BENCH_shard.json
