@@ -1,0 +1,174 @@
+"""Rule-serving benchmark: cold vs warm minority-rule queries + shard parity.
+
+Serves a fixed pool of antecedent rule queries through ``RuleServer`` at
+several batch sizes, cold (rule cache AND count cache off: every query pays
+the composed counting pass) and warm (both caches on, pool primed: verdicts
+come straight from the rule cache).  Then checks 1/2/4-shard stores serve
+the identical rule set (``rules_for`` verdicts and the ``top_rules`` sweep)
+— the all-reduce must be invisible to the rule math.  Run as a script it
+emits ``BENCH_rules.json``; the perf gate is warm >= 5x cold at batch >= 16.
+
+  PYTHONPATH=src python -m benchmarks.rule_serve [--json BENCH_rules.json]
+"""
+from __future__ import annotations
+
+import json
+from typing import List
+
+import numpy as np
+
+from repro.core.mra import Rule
+from repro.data import bernoulli_db
+from repro.kernels.itemset_count import itemset_counts
+from repro.mining import DenseDB, encode_targets
+from repro.serve import CountServer, RuleServer
+
+from .common import Row, timeit
+
+ROWS, ITEMS, POOL = 16384, 48, 256
+BATCHES = [1, 4, 16, 64]
+MIN_CONF = 0.05
+THETA = 0.004   # ~ rare-class item frequency: the top_rules sweep is non-empty
+SHARDS = [1, 2, 4]
+
+
+def _workload(seed: int = 0):
+    tx, y = bernoulli_db(ROWS, ITEMS, p_x=0.15, p_y=0.05, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    pool = [tuple(rng.choice(ITEMS, size=rng.integers(1, 4),
+                             replace=False).tolist())
+            for _ in range(POOL)]
+    return tx, y, pool
+
+
+def _serve_pool(ruler: RuleServer, pool, batch: int):
+    out = {}
+    for s in range(0, len(pool), batch):
+        chunk = pool[s:s + batch]
+        for key, rule in zip(chunk,
+                             ruler.rules_for(chunk, min_conf=MIN_CONF)):
+            out[tuple(sorted(set(key), key=repr))] = rule
+    return out
+
+
+def _expected_rules(tx, y, pool):
+    """Independent oracle: fresh dense counts -> host rule math."""
+    import jax.numpy as jnp
+
+    keys = [tuple(sorted(set(k), key=repr)) for k in pool]
+    ddb = DenseDB.encode(tx, classes=list(y), n_classes=2)
+    rows = np.asarray(itemset_counts(
+        ddb.bits, jnp.asarray(encode_targets(keys, ddb.vocab)), ddb.weights))
+    want = {}
+    for key, row in zip(keys, rows):
+        cnt, gcnt = int(row[1]), int(row.sum()) - int(row[1])
+        conf = cnt / (cnt + gcnt) if (cnt + gcnt) else 0.0
+        want[key] = (Rule(key, 1, cnt / len(tx), conf, cnt, gcnt)
+                     if conf >= MIN_CONF else None)
+    return want
+
+
+def run(record: List[dict] | None = None) -> List[Row]:
+    tx, y, pool = _workload()
+    want = _expected_rules(tx, y, pool)
+
+    rows: List[Row] = []
+    tag = f"rules[N={ROWS},pool={POOL}]"
+
+    us_cold, us_warm = {}, {}
+    for batch in BATCHES:
+        # ---- cold: no rule cache, no count cache — every query counts ------
+        cold = RuleServer(CountServer(tx, classes=list(y), cache=False),
+                          cache=False)
+        got = _serve_pool(cold, pool, batch)
+        assert got == want, f"cold batch={batch}: served rules != oracle"
+        us = timeit(lambda: _serve_pool(cold, pool, batch),
+                    repeats=3, warmup=1) / POOL
+        us_cold[batch] = us
+        rows.append((f"{tag}/batch={batch}(cold)", us, "rule_cache=off"))
+
+        # ---- warm: both caches on, pool primed — verdicts are cache hits ---
+        warm = RuleServer(CountServer(tx, classes=list(y), cache=True),
+                          cache=True)
+        got = _serve_pool(warm, pool, batch)          # prime (all misses)
+        assert got == want, f"warm batch={batch}: served rules != oracle"
+        us = timeit(lambda: _serve_pool(warm, pool, batch),
+                    repeats=3, warmup=1) / POOL
+        us_warm[batch] = us
+        speedup = us_cold[batch] / us
+        rows.append((f"{tag}/batch={batch}(warm)", us,
+                     f"warm_vs_cold={speedup:.1f}x;hit_rate="
+                     f"{warm.cache.hit_rate:.2f}"))
+        if record is not None:
+            record.append({
+                "variant": "rules_for", "batch": batch,
+                "us_per_query_cold": us_cold[batch],
+                "us_per_query_warm": us,
+                "qps_cold": 1e6 / us_cold[batch], "qps_warm": 1e6 / us,
+                "warm_vs_cold_speedup": speedup,
+                "meets_5x_gate": (speedup >= 5.0 if batch >= 16 else None),
+                "rule_cache_hit_rate": warm.cache.hit_rate,
+            })
+
+    # ---- shard parity: 1/2/4-shard stores serve the identical rule set -----
+    reference = None
+    for n in SHARDS:
+        ruler = RuleServer(CountServer(tx, classes=list(y), shards=n))
+        served = _serve_pool(ruler, pool, 64)
+        assert served == want, f"shards={n}: served rules != oracle"
+        top = ruler.top_rules(THETA, MIN_CONF, optimal=True)
+        if reference is None:
+            reference = top
+        parity = served == want and top == reference
+        us = timeit(lambda: _serve_pool(ruler, pool, 64),
+                    repeats=3, warmup=0) / POOL
+        rows.append((f"{tag}/shards={n}", us,
+                     f"parity={parity};top_rules={len(top)}"))
+        if record is not None:
+            record.append({"variant": "shard_parity", "shards": n,
+                           "us_per_query_warm": us, "parity": parity,
+                           "top_rules": len(top)})
+        assert parity, f"shards={n}: rule parity broken"
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_rules.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem; exactness asserts only")
+    args = ap.parse_args()
+
+    if args.smoke:
+        global ROWS, POOL
+        ROWS, POOL = 2048, 64
+
+    record: List[dict] = []
+    rows = run(record)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    gate = [r for r in record
+            if r["variant"] == "rules_for" and r["batch"] >= 16]
+    payload = {
+        "bench": "rules",
+        "backend": jax.default_backend(),
+        "problem": {"rows": ROWS, "items": ITEMS, "pool": POOL,
+                    "batches": BATCHES, "min_conf": MIN_CONF,
+                    "theta": THETA, "shards": SHARDS},
+        "warm_5x_gate_met": all(r["meets_5x_gate"] for r in gate),
+        "rows": record,
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.json} ({len(record)} records, 5x gate "
+          f"{'MET' if payload['warm_5x_gate_met'] else 'MISSED'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,7 @@ stream  — streaming out-of-core sweep vs single-pass dense counting
 serve   — micro-batched count serving vs per-query launches, cold/warm cache
 mine    — unified level-wise mining driver vs the legacy per-engine loops
 shard   — sharded-store throughput (1/2/4/8 shards) + async flush latency
+rules   — minority-rule serving cold/warm throughput + 1/2/4-shard parity
 """
 import argparse
 import sys
@@ -20,7 +21,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig5", "fig6", "kernel", "scaling", "stream",
-                             "serve", "mine", "shard"])
+                             "serve", "mine", "shard", "rules"])
     args = ap.parse_args()
 
     from .common import emit
@@ -50,6 +51,9 @@ def main() -> None:
     if args.only in (None, "shard"):
         from . import shard_serve
         suites["shard"] = shard_serve.run
+    if args.only in (None, "rules"):
+        from . import rule_serve
+        suites["rules"] = rule_serve.run
 
     print("name,us_per_call,derived")
     ok = True

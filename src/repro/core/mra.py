@@ -72,7 +72,13 @@ def minority_report(
     if len(db) != len(classes):
         raise ValueError("transactions/classes length mismatch")
     n_db = len(db)
-    c_star = min_support * n_db  # fractional threshold; count >= c_star
+    from .incremental import ceil_count
+    # ONE threshold rule end to end (the repo-wide epsilon-guarded ceil):
+    # filtering I' on the raw float product would exclude an item whose count
+    # sits exactly on a threshold that carries upward FP noise (e.g.
+    # 0.07 * 100 = 7.000000000000001) while the FP-growth min-count below —
+    # and every engine-side miner — accepts it
+    min_count = ceil_count(min_support * n_db)
 
     # ---- first pass: per-item counts in rare class and overall -------------
     c1: Dict[Item, int] = {}
@@ -85,7 +91,7 @@ def minority_report(
             c_all[a] = c_all.get(a, 0) + 1
             if rare:
                 c1[a] = c1.get(a, 0) + 1
-    items_kept = [a for a, c in c1.items() if c >= c_star]
+    items_kept = [a for a, c in c1.items() if c >= min_count]
 
     # Shared support-descending order over the *entire DB* (paper §4.1).
     order = ItemOrder(sorted(items_kept, key=lambda a: (-c_all[a], repr(a))))
@@ -99,9 +105,6 @@ def minority_report(
 
     # ---- FP-growth on the small (rare) tree -> TIS-tree ---------------------
     tis = TISTree(order)
-    # min-count is ceil-like: count >= c_star with float threshold.
-    import math
-    min_count = max(1, math.ceil(c_star - 1e-9))
     fp_growth_into_tis(fp1, min_count, tis)
 
     # ---- GFP-growth on the big (common) tree --------------------------------

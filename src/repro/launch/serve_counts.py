@@ -16,6 +16,14 @@ needs ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` or real
 devices).  ``--async-flush`` serves through the background flush loop
 (``--max-delay-ms`` / ``--min-batch`` triggers): requests are submitted as
 futures and the flush-latency distribution is reported at the end.
+
+``--rules`` layers a ``RuleServer`` on top: every round additionally serves
+minority-rule queries (antecedent -> ``--target-class`` at ``--min-conf``)
+from the same pool through the rule cache, appends go through the rule
+server (stale-verdict purge + hottest-key prefetch), and with ``--theta``
+the run ends with a resumable ``top_rules`` sweep.  ``--verify`` then also
+cross-checks every served rule — and the top_rules list — against the host
+``minority_report`` / ``optimal_rule_set`` oracle on the full history.
 """
 import argparse
 import time
@@ -55,6 +63,10 @@ def main() -> None:
                     help="serve through the background flush loop")
     ap.add_argument("--max-delay-ms", type=float, default=5.0)
     ap.add_argument("--min-batch", type=int, default=8)
+    ap.add_argument("--rules", action="store_true",
+                    help="serve minority rules over the count path")
+    ap.add_argument("--min-conf", type=float, default=0.3)
+    ap.add_argument("--target-class", type=int, default=1)
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -88,6 +100,12 @@ def main() -> None:
     st = server.store
     print(f"resident: {st.resident} DB, {st.base_rows} unique rows "
           f"(of {st.n_rows}), {st.vocab.size} items, v{st.version}")
+    ruler = None
+    if args.rules:
+        from ..serve import RuleServer
+
+        ruler = RuleServer(server, target_class=args.target_class,
+                           cache=not args.no_cache)
     if args.theta is not None:
         t0 = time.time()
         freq = server.mine(args.theta)
@@ -112,13 +130,16 @@ def main() -> None:
               f"--rounds {args.rounds}")
 
     n_queries = 0
+    n_rule_queries = 0
     t_serve = 0.0
+    t_rules = 0.0
     for rnd in range(args.rounds):
         if rnd in append_at:
             batch, yb = bernoulli_db(args.append_rows, args.items, args.p_x,
                                      args.p_y, args.seed + 100 + rnd)
             t0 = time.time()
-            v = server.append(batch, classes=list(yb))
+            appender = server if ruler is None else ruler
+            v = appender.append(batch, classes=list(yb))
             msg = f"append #{v}: +{len(batch)} rows ({time.time()-t0:.2f}s)"
             if args.theta is not None:
                 msg += f", frequent set -> {len(server.frequent)}"
@@ -140,6 +161,13 @@ def main() -> None:
         else:
             server.flush()
         t_serve += time.time() - t0
+        if ruler is not None:            # rule traffic rides the same pool,
+            t0 = time.time()             # timed on its own clock
+            picks = rng.integers(0, len(pool), args.batch)
+            ruler.rules_for([pool[i] for i in picks],
+                            min_conf=args.min_conf)
+            t_rules += time.time() - t0
+            n_rule_queries += args.batch
     server.close()                        # drains any still-pending tickets
 
     us_q = 1e6 * t_serve / max(1, n_queries)
@@ -160,6 +188,25 @@ def main() -> None:
     print(f"batcher deduped {s['batcher']['deduped']}/"
           f"{s['batcher']['queries']} queries; {cache_msg}; "
           f"{s['store']['kernel_launches']} kernel launches")
+    top = None
+    if ruler is not None:
+        rst = ruler.stats()
+        rc = rst["rule_cache"]
+        rc_msg = ("rule cache off" if rc is None else
+                  f"rule cache hit rate {rc['hit_rate']:.2f} "
+                  f"({rc['hits']} hits)")
+        us_r = 1e6 * t_rules / max(1, n_rule_queries)
+        print(f"rules: {rst['rule_queries']} rule queries "
+              f"({us_r:.1f} us/rule-query), {rst['prefetches']} prefetch "
+              f"rounds ({rst['prefetched_keys']} keys re-warmed); {rc_msg}")
+        if args.theta is not None:
+            t0 = time.time()
+            top = ruler.top_rules(args.theta, args.min_conf, optimal=True)
+            print(f"top_rules(theta={args.theta}, "
+                  f"min_conf={args.min_conf}): {len(top)} optimal rules "
+                  f"({time.time() - t0:.2f}s)")
+            for r in top[:3]:
+                print(f"  {r}")
 
     if args.verify:
         from ..mining import DenseDB, encode_targets
@@ -184,6 +231,35 @@ def main() -> None:
         assert (got == want).all(), "served counts != fresh dense"
         print(f"verified {len(keys)} keys bit-identical to a fresh dense "
               f"encode at v{server.store.version}")
+        if ruler is not None:
+            # served rule verdicts vs the independently counted fresh rows
+            served = ruler.rules_for(keys, min_conf=args.min_conf)
+            n_db = server.store.n_rows
+            for key, row, rule in zip(keys, want, served):
+                key = tuple(sorted(set(key), key=repr))
+                cnt = int(row[args.target_class])
+                gcnt = int(row.sum()) - cnt
+                conf = cnt / (cnt + gcnt) if (cnt + gcnt) else 0.0
+                if conf >= args.min_conf:
+                    assert rule is not None and rule.count == cnt \
+                        and rule.g_count == gcnt \
+                        and rule.confidence == conf \
+                        and rule.support == cnt / n_db, key
+                else:
+                    assert rule is None, key
+            if args.theta is not None:
+                from ..core import minority_report, optimal_rule_set
+
+                res = minority_report(
+                    all_tx, all_y, target_class=args.target_class,
+                    min_support=args.theta, min_confidence=args.min_conf)
+                assert ruler.top_rules(args.theta, args.min_conf) \
+                    == res.rules, "served rule set != host minority_report"
+                assert top == optimal_rule_set(res.rules), \
+                    "served optimal set != host optimal_rule_set"
+                print(f"verified {len(res.rules)} rules "
+                      f"({len(top)} optimal) == host minority_report "
+                      f"oracle at v{server.store.version}")
 
 
 if __name__ == "__main__":

@@ -70,7 +70,13 @@ def mine_frequent(
     out: Dict[Key, int] = {}
     partial: Optional[dict] = None
     level = 0
-    msig = backend.mine_signature()
+    # the checkpoint identity is the backend state AND the mining parameters:
+    # a saved total-count mine must not answer a class-guided resume (or a
+    # different threshold/cap) at the same store version — the absorbed
+    # levels would be silently wrong for the new query
+    msig = dict(backend.mine_signature())
+    msig.update(min_count=float(min_count), class_column=class_column,
+                max_len=max_len)
     if checkpoint is not None:
         state = checkpoint.load_state()
         if state is not None and all(

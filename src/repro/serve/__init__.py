@@ -2,12 +2,15 @@
 # micro-batched itemset-count queries (the paper's "count of a given large
 # list of itemsets" contract as a serving workload), with an
 # (itemset, version)-keyed LRU result cache, §5.2 incremental re-mining, a
-# sharded store spanning a device mesh (exact all-reduced counts), and a
-# deadline/occupancy-triggered background flush loop.
+# sharded store spanning a device mesh (exact all-reduced counts), a
+# deadline/occupancy-triggered background flush loop, and MRA minority-rule
+# serving (RuleServer: confidence from the per-class count rows, rule cache
+# keyed on (antecedent, version, min_conf), version prefetch on append).
 from .async_loop import AsyncFlusher, CountFuture
 from .batcher import (BatchPlan, MicroBatcher, QueryRequest, build_masks,
                       canonical_itemset)
 from .cache import CountCache
+from .rules import RuleCache, RuleServer
 from .service import (CountServer, MiningRefreshError,
                       versioned_mine_frequent)
 from .shard import ShardedCountBackend, ShardedDB
@@ -17,6 +20,6 @@ __all__ = [
     "AsyncFlusher", "BatchPlan", "CountFuture", "MicroBatcher",
     "QueryRequest", "build_masks", "canonical_itemset", "CountCache",
     "CountServer", "MiningRefreshError", "versioned_mine_frequent",
-    "ShardedCountBackend", "ShardedDB", "VersionedCountBackend",
-    "VersionedDB", "check_class_labels",
+    "RuleCache", "RuleServer", "ShardedCountBackend", "ShardedDB",
+    "VersionedCountBackend", "VersionedDB", "check_class_labels",
 ]

@@ -1,43 +1,42 @@
-"""LRU result cache for served counts, keyed on (canonical itemset, version).
+"""LRU result caches for served counts and rules, keyed on (identity, version).
 
 The DB version is half the key, so an ``append`` (which bumps the store's
-version) invalidates every cached row BY CONSTRUCTION — a stale hit is
+version) invalidates every cached entry BY CONSTRUCTION — a stale hit is
 impossible, no flush coordination needed.  Stale-version entries age out of
 the LRU naturally; ``purge_stale`` drops them eagerly after an append when
 memory matters more than the O(capacity) sweep.
 
 Capacity is dual-budgeted: ``capacity`` bounds the entry COUNT, ``max_bytes``
-(optional) bounds the RESIDENT BYTES of the cached count rows — the right
-knob when row width varies (multi-class stores) or when the cache shares a
-host-memory budget with a streaming-resident DB.  Eviction is LRU under
-whichever budget is exceeded.
+(optional) bounds the PRICED BYTES of the cached values — the right knob
+when entry size varies (multi-class count rows, variable-length rule
+antecedents) or when the cache shares a host-memory budget with a
+streaming-resident DB.  Eviction is LRU under whichever budget is exceeded.
 
 Admission rule: an entry larger than ``max_bytes`` on its own is REJECTED up
 front (counted in ``oversized_rejects``), before any resident entry is
 touched — admitting it would evict the entire warm working set only to drop
 the oversized entry itself once the budget check ran.
 
-A hit returns a defensive copy: cached rows are immutable serving results,
-never views into a caller's buffer.
+:class:`BudgetedLRU` owns that discipline ONCE (ledger, admission, eviction,
+purge, stats); :class:`CountCache` instances it for (C,) int32 count rows
+(priced at ``nbytes``, hits return a defensive copy) and
+``serve.rules.RuleCache`` for rule verdicts (deterministic host-side
+pricing, ``None`` as a first-class cached value).
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Hashable, Optional, Tuple
+from typing import Any, Hashable, Optional, Tuple
 
 import numpy as np
 
 Key = Tuple[Hashable, ...]
 
 
-class CountCache:
-    """Bounded LRU: (itemset key, version) -> (C,) int32 count row.
-
-    ``capacity`` caps the entry count; ``max_bytes`` (None = unbounded)
-    additionally caps the summed ``nbytes`` of the cached rows.  An entry
-    larger than ``max_bytes`` on its own is rejected at admission without
-    disturbing resident entries — the budget is a hard ceiling.
-    """
+class BudgetedLRU:
+    """Dual-budget LRU core: (key, version) -> value with an exact byte
+    ledger.  Subclasses define :meth:`_price` (value -> int bytes) and wrap
+    :meth:`_lookup` / :meth:`_store` with their value semantics."""
 
     def __init__(self, capacity: int = 65536,
                  max_bytes: Optional[int] = None):
@@ -47,19 +46,22 @@ class CountCache:
             raise ValueError("max_bytes must be positive (or None)")
         self.capacity = capacity
         self.max_bytes = max_bytes
-        self._d: "OrderedDict[Tuple[Key, int], np.ndarray]" = OrderedDict()
+        self._d: "OrderedDict[Tuple[Key, int], Any]" = OrderedDict()
         self._bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.oversized_rejects = 0
 
+    def _price(self, value) -> int:
+        raise NotImplementedError
+
     def __len__(self) -> int:
         return len(self._d)
 
     @property
     def nbytes(self) -> int:
-        """Resident bytes of the cached count rows."""
+        """Priced resident bytes of the cached values."""
         return self._bytes
 
     def _over_budget(self) -> bool:
@@ -67,40 +69,38 @@ class CountCache:
                 or (self.max_bytes is not None
                     and self._bytes > self.max_bytes))
 
-    def get(self, key: Key, version: int) -> Optional[np.ndarray]:
-        entry = self._d.get((key, version))
-        if entry is None:
+    def _lookup(self, k) -> Tuple[bool, Any]:
+        """LRU-touching lookup; counts the hit/miss."""
+        if k not in self._d:
             self.misses += 1
-            return None
-        self._d.move_to_end((key, version))
+            return False, None
+        self._d.move_to_end(k)
         self.hits += 1
-        return entry.copy()
+        return True, self._d[k]
 
-    def put(self, key: Key, version: int, counts: np.ndarray) -> None:
-        k = (key, version)
-        arr = np.array(counts, np.int32, copy=True)
-        if self.max_bytes is not None and arr.nbytes > self.max_bytes:
+    def _store(self, k, value) -> None:
+        size = self._price(value)
+        if self.max_bytes is not None and size > self.max_bytes:
             # an entry that can never fit must not touch resident entries:
             # admitting it first would evict the whole warm set before the
             # budget loop finally dropped the oversized entry itself
             self.oversized_rejects += 1
             return
-        old = self._d.get(k)
-        if old is not None:
-            self._bytes -= old.nbytes
-        self._d[k] = arr
-        self._bytes += arr.nbytes
+        if k in self._d:
+            self._bytes -= self._price(self._d[k])
+        self._d[k] = value
+        self._bytes += size
         self._d.move_to_end(k)
         while self._d and self._over_budget():
             _, dropped = self._d.popitem(last=False)
-            self._bytes -= dropped.nbytes
+            self._bytes -= self._price(dropped)
             self.evictions += 1
 
     def purge_stale(self, current_version: int) -> int:
-        """Eagerly drop rows from superseded versions; returns how many."""
+        """Eagerly drop entries from superseded versions; returns how many."""
         stale = [k for k in self._d if k[1] != current_version]
         for k in stale:
-            self._bytes -= self._d[k].nbytes
+            self._bytes -= self._price(self._d[k])
             del self._d[k]
         return len(stale)
 
@@ -116,3 +116,23 @@ class CountCache:
                 "evictions": self.evictions,
                 "oversized_rejects": self.oversized_rejects,
                 "hit_rate": round(self.hit_rate, 4)}
+
+
+class CountCache(BudgetedLRU):
+    """Bounded LRU: (itemset key, version) -> (C,) int32 count row.
+
+    ``capacity`` caps the entry count; ``max_bytes`` (None = unbounded)
+    additionally caps the summed ``nbytes`` of the cached rows.  A hit
+    returns a defensive copy: cached rows are immutable serving results,
+    never views into a caller's buffer.
+    """
+
+    def _price(self, value: np.ndarray) -> int:
+        return value.nbytes
+
+    def get(self, key: Key, version: int) -> Optional[np.ndarray]:
+        hit, entry = self._lookup((key, version))
+        return entry.copy() if hit else None
+
+    def put(self, key: Key, version: int, counts: np.ndarray) -> None:
+        self._store((key, version), np.array(counts, np.int32, copy=True))

@@ -292,7 +292,8 @@ class CountServer:
                     raise MiningRefreshError(version, e) from e
             return version
 
-    def mine(self, theta: float, *, checkpoint=None) -> Dict[Key, int]:
+    def mine(self, theta: float, *, checkpoint=None,
+             class_column: Optional[int] = None) -> Dict[Key, int]:
         """Bootstrap exact frequent-itemset mining at relative threshold
         ``theta``; subsequent ``append`` calls maintain it incrementally.
 
@@ -301,16 +302,29 @@ class CountServer:
         the mine persists per-chunk progress, so a killed server process can
         restart and finish the bootstrap from the last completed chunk.  The
         durable state is pinned to the store version — a resume after further
-        appends restarts the mine cleanly instead of serving stale levels."""
+        appends restarts the mine cleanly instead of serving stale levels.
+
+        ``class_column`` restricts support to ONE class's count column (the
+        MRA antecedent discovery behind ``RuleServer.top_rules``: itemsets
+        with C_class >= ceil_count(theta * n_rows)).  A class-guided mine is
+        a QUERY, not a baseline: it returns the frequent set without arming
+        §5.2 incremental maintenance, whose pigeonhole argument is stated on
+        total counts."""
         if not (0.0 < theta <= 1.0):
             raise ValueError("theta in (0, 1]")
+        if class_column is not None and \
+                not (0 <= class_column < self.store.n_classes):
+            raise ValueError(
+                f"class_column {class_column} out of range for "
+                f"n_classes={self.store.n_classes}")
         with self._lock:
             frequent = versioned_mine_frequent(
                 self.store, ceil_count(theta * self.store.n_rows),
-                checkpoint=checkpoint)
-            # commit only after the mine succeeds: a failed mine must not arm
-            # incremental maintenance over an empty/stale baseline
-            self._theta, self._frequent = theta, frequent
+                class_column=class_column, checkpoint=checkpoint)
+            if class_column is None:
+                # commit only after the mine succeeds: a failed mine must not
+                # arm incremental maintenance over an empty/stale baseline
+                self._theta, self._frequent = theta, frequent
             return dict(frequent)
 
     def _refresh_frequent(self, increment: List[List[Item]]) -> None:

@@ -1,0 +1,406 @@
+"""Oracle-parity battery for online minority-rule serving (serve/rules.py).
+
+The serving contract: every rule verdict (count, g_count, support,
+confidence, membership in the optimal set) served by ``RuleServer`` over the
+count path is BIT-EXACT against the host ``minority_report`` /
+``optimal_rule_set`` oracle on the same transaction history — at every
+version, over appends, on a single store (dense or streaming) and on a
+sharded store (host all-reduce loop, and the mesh psum path in a subprocess
+under ``--runslow``).  Plus ``RuleCache`` invalidation/prefetch/ledger
+regressions and an ``optimal_rule_set`` property test against a brute-force
+subset-domination oracle.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import minority_report, optimal_rule_set
+from repro.core.mra import Rule
+from repro.serve import CountServer, RuleCache, RuleServer
+
+from _pbt import given, settings, strategies as st  # hypothesis or offline shim
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+THETA, MIN_CONF = 0.04, 0.36
+
+
+def _db(rng, rows, items, p=0.3):
+    return [[int(a) for a in range(items) if rng.random() < p]
+            for _ in range(rows)]
+
+
+def _labels(rng, tx, p=0.35):
+    return [int(rng.random() < p) for _ in tx]
+
+
+def _battery(make_server, rounds=2, seed=7):
+    """Serve rules over ``rounds`` append rounds; every round must match the
+    host oracle exactly (complete rule list, optimal set, per-antecedent
+    verdicts)."""
+    rng = np.random.default_rng(seed)
+    tx = _db(rng, 300, 24)
+    y = _labels(rng, tx)
+    ruler = RuleServer(make_server(tx, y))
+    hist, ys = [list(t) for t in tx], list(y)
+    for rnd in range(rounds + 1):
+        res = minority_report(hist, ys, target_class=1,
+                              min_support=THETA, min_confidence=MIN_CONF)
+        assert res.rules, f"round {rnd}: oracle mined no rules (bad params)"
+        got = ruler.top_rules(THETA, MIN_CONF)
+        assert got == res.rules, f"round {rnd}: complete rule set diverged"
+        assert ruler.top_rules(THETA, MIN_CONF, optimal=True) \
+            == optimal_rule_set(res.rules), f"round {rnd}: optimal set"
+        # per-antecedent verdicts through the cache/batch path: Rule equality
+        # covers count, g_count, support AND confidence bit-exactly
+        antes = [r.antecedent for r in res.rules]
+        assert ruler.rules_for(antes, min_conf=MIN_CONF) == res.rules
+        if rnd < rounds:
+            batch = _db(rng, 120, 24 + 4 * rnd)   # widens the vocab too
+            yb = _labels(rng, batch)
+            ruler.append(batch, classes=yb)
+            hist += [list(t) for t in batch]
+            ys += yb
+
+
+def test_top_rules_oracle_parity_dense_over_appends():
+    _battery(lambda tx, y: CountServer(tx, classes=y))
+
+
+def test_top_rules_oracle_parity_streaming_store():
+    _battery(lambda tx, y: CountServer(tx, classes=y, streaming=True,
+                                       chunk_rows=64))
+
+
+def test_top_rules_oracle_parity_sharded_host_loop():
+    _battery(lambda tx, y: CountServer(tx, classes=y, shards=4))
+
+
+def test_rules_for_verdicts_unknown_empty_and_target_override():
+    rng = np.random.default_rng(11)
+    tx = _db(rng, 200, 12)
+    y = [i % 3 for i in range(len(tx))]          # 3 classes
+    ruler = RuleServer(CountServer(tx, classes=y, n_classes=3),
+                       target_class=2)
+    # empty antecedent = the class prior
+    (prior,) = ruler.rules_for([()])
+    n2 = sum(1 for c in y if c == 2)
+    assert prior == Rule((), 2, n2 / len(tx), n2 / len(tx),
+                         n2, len(tx) - n2)
+    # unknown item: exact count 0 on both sides -> confidence 0
+    (unk,) = ruler.rules_for([(999,)])
+    assert unk == Rule((999,), 2, 0.0, 0.0, 0, 0)
+    assert ruler.rules_for([(999,)], min_conf=0.1) == [None]
+    # per-call target override beats the constructor default
+    (r0,) = ruler.rules_for([(0,)], target_class=0)
+    (r2,) = ruler.rules_for([(0,)])
+    assert r0.consequent == 0 and r2.consequent == 2
+    assert r0.count + r0.g_count == r2.count + r2.g_count
+    # canonicalization: permuted/duplicated antecedents are one verdict
+    a, b = ruler.rules_for([(3, 1, 1), (1, 3)])
+    assert a == b and a.antecedent == (1, 3)
+
+
+def test_rule_server_validation():
+    srv = CountServer([[1, 2], [2]], classes=[0, 1])
+    with pytest.raises(ValueError, match="target_class"):
+        RuleServer(srv, target_class=2)
+    with pytest.raises(ValueError, match="prefetch_top"):
+        RuleServer(srv, prefetch_top=-1)
+    ruler = RuleServer(srv)
+    with pytest.raises(ValueError, match="target_class"):
+        ruler.rules_for([(1,)], target_class=5)
+    with pytest.raises(ValueError, match="min_conf"):
+        ruler.rules_for([(1,)], min_conf=1.5)
+    with pytest.raises(ValueError, match="class_column"):
+        srv.mine(0.5, class_column=3)
+
+
+def test_class_guided_mine_matches_oracle_and_does_not_arm():
+    from repro.core import mine_frequent
+    from repro.core.incremental import ceil_count
+
+    rng = np.random.default_rng(23)
+    tx = _db(rng, 250, 16)
+    y = _labels(rng, tx)
+    srv = CountServer(tx, classes=y)
+    got = srv.mine(0.05, class_column=1)
+    # guided mine == host FP-growth over the target-class rows only
+    want = mine_frequent([t for t, c in zip(tx, y) if c == 1],
+                         ceil_count(0.05 * len(tx)))
+    assert got == want
+    with pytest.raises(RuntimeError, match="mine"):
+        srv.frequent        # the class-guided query must NOT arm maintenance
+
+
+def test_class_guided_mine_discards_total_count_checkpoint(tmp_path):
+    """A checkpoint saved by a total-count mine must NOT answer a
+    class-guided resume at the same version (or vice versa): the mining
+    parameters are part of the checkpoint identity."""
+    from repro.core import mine_frequent
+    from repro.core.incremental import ceil_count
+    from repro.mining.distributed import MiningCheckpoint
+
+    rng = np.random.default_rng(47)
+    tx = _db(rng, 200, 16)
+    y = _labels(rng, tx)
+    srv = CountServer(tx, classes=y)
+    ruler = RuleServer(srv)
+    cp = MiningCheckpoint(str(tmp_path / "mine.json"))
+    srv.mine(0.1, checkpoint=cp)                     # total-count state saved
+    got = ruler.top_rules(0.1, 0.0, checkpoint=cp)   # must not resume from it
+    res = minority_report(tx, y, target_class=1, min_support=0.1,
+                          min_confidence=0.0)
+    assert got == res.rules
+    # reverse direction: the class-guided state must not answer a total mine
+    assert srv.mine(0.1, checkpoint=cp) \
+        == mine_frequent(tx, ceil_count(0.1 * len(tx)))
+
+
+def test_threshold_boundary_fp_noise_parity():
+    """0.07 * 100 == 7.000000000000001: the epsilon-guarded ceil keeps an
+    exactly-at-threshold antecedent on BOTH the host and serving sides."""
+    tx = [[0] if i < 7 else [1] for i in range(100)]
+    y = [1] * 7 + [0] * 93
+    res = minority_report(tx, y, target_class=1, min_support=0.07,
+                          min_confidence=0.0)
+    assert any(r.antecedent == (0,) and r.count == 7 for r in res.rules)
+    ruler = RuleServer(CountServer(tx, classes=y))
+    assert ruler.top_rules(0.07, 0.0) == res.rules
+
+
+# ------------------------------------------------------------ rule cache
+def test_rule_cache_stale_version_never_served_after_append():
+    rng = np.random.default_rng(31)
+    tx = _db(rng, 150, 10)
+    y = _labels(rng, tx)
+    srv = CountServer(tx, classes=y)
+    ruler = RuleServer(srv)
+    (before,) = ruler.rules_for([(0,)])
+    # append BEHIND the rule server (no purge, no prefetch): the v0 entry is
+    # still resident, yet the version key makes it unservable
+    batch = [[0, 1]] * 40
+    srv.append(batch, classes=[1] * 40)
+    assert len(ruler.cache) == 1
+    (after,) = ruler.rules_for([(0,)])
+    assert after != before
+    n = len(tx) + 40
+    cnt = sum(1 for t, c in zip(tx, y) if 0 in t and c == 1) + 40
+    gcnt = sum(1 for t, c in zip(tx, y) if 0 in t and c == 0)
+    assert after == Rule((0,), 1, cnt / n, cnt / (cnt + gcnt), cnt, gcnt)
+    # the stale v0 verdict is purgeable and the ledger follows it out
+    assert ruler.cache.purge_stale(srv.store.version) == 1
+    assert ruler.cache.nbytes == RuleCache.entry_nbytes(after)
+
+
+def test_rule_cache_prefetch_warms_only_current_version_keys():
+    rng = np.random.default_rng(37)
+    tx = _db(rng, 200, 12)
+    y = _labels(rng, tx)
+    srv = CountServer(tx, classes=y)
+    ruler = RuleServer(srv, prefetch_top=4)
+    hot = [(0,), (1,), (0, 1), (2,)]
+    for _ in range(3):                           # build heat on 4 keys
+        ruler.rules_for(hot, min_conf=0.1)
+    ruler.rules_for([(5,), (6,)], min_conf=0.1)  # colder keys
+    batch = _db(rng, 60, 12)
+    v = ruler.append(batch, classes=_labels(rng, batch))
+    assert ruler.n_prefetches == 1
+    # ONLY current-version entries are resident (stale purged, warm rewarmed)
+    assert len(ruler.cache) == 4
+    assert all(k[1] == v for k in ruler.cache._d)
+    # hot keys are answered without any device work
+    launches = srv.store.kernel_launches
+    hits0 = ruler.cache.hits
+    got = ruler.rules_for(hot, min_conf=0.1)
+    assert srv.store.kernel_launches == launches
+    assert ruler.cache.hits == hits0 + 4
+    # and the prefetched verdicts are the CURRENT counts (full history)
+    hist = [list(t) for t in tx] + [list(t) for t in batch]
+    assert got[0] is not None
+    assert got[0].count + got[0].g_count == sum(1 for t in hist if 0 in t)
+
+
+def test_rule_cache_ledgers_exact_under_mixed_rule_count_traffic():
+    rng = np.random.default_rng(41)
+    tx = _db(rng, 180, 14)
+    y = _labels(rng, tx)
+    srv = CountServer(tx, classes=y)
+    ruler = RuleServer(srv, cache_size=6, cache_bytes=260, prefetch_top=0)
+    pool = [(a,) for a in range(10)] + [(0, 1), (2, 3), (4, 5, 6)]
+    purged = 0
+    for rnd in range(3):
+        ruler.rules_for(pool[rnd:rnd + 8], min_conf=0.2)
+        srv.query(pool[rnd:rnd + 4])             # count traffic interleaves
+        if rnd == 1:
+            # a 12-item antecedent prices at 96+16*12=288 > max_bytes: the
+            # oversized-reject path under live traffic
+            ruler.rules_for([tuple(range(12))], min_conf=0.0)
+            batch = _db(rng, 40, 14)
+            srv.append(batch, classes=_labels(rng, batch))
+            purged += ruler.cache.purge_stale(srv.store.version)
+    cache = ruler.cache
+    st_ = cache.stats()
+    # the byte ledger is EXACT: it equals a recount over resident entries
+    assert st_["bytes"] == sum(RuleCache.entry_nbytes(v)
+                               for v in cache._d.values()) == cache.nbytes
+    assert st_["size"] == len(cache._d) <= cache.capacity
+    assert st_["bytes"] <= cache.max_bytes
+    # every miss becomes exactly one put; each admitted put is resident,
+    # evicted, or purged — the counters close the loop with no slack
+    assert st_["oversized_rejects"] == 1
+    assert st_["misses"] - st_["oversized_rejects"] \
+        == st_["size"] + st_["evictions"] + purged
+    assert st_["evictions"] > 0                  # budget actually exercised
+    # count-cache ledger untouched by rule traffic beyond its own entries
+    cst = srv.cache.stats()
+    assert cst["bytes"] == srv.cache.nbytes
+
+
+def test_rule_cache_lru_eviction_oversized_reject_and_none_verdicts():
+    cache = RuleCache(capacity=2, max_bytes=300)
+    r1 = Rule((1,), 1, 0.1, 0.5, 5, 5)
+    r12 = Rule((1, 2), 1, 0.1, 0.5, 5, 5)
+    cache.put(((1,), 1, 0.3), 0, r1)
+    cache.put(((1, 2), 1, 0.3), 0, None)         # None verdict is cached
+    hit, rule = cache.get(((1, 2), 1, 0.3), 0)
+    assert hit and rule is None
+    assert cache.nbytes == RuleCache.entry_nbytes(r1) + 16
+    cache.put(((3,), 1, 0.3), 0, r12)            # capacity 2: LRU evicts
+    assert len(cache) == 2 and cache.evictions == 1
+    hit, _ = cache.get(((1,), 1, 0.3), 0)        # (1,) was LRU -> gone
+    assert not hit
+    big = RuleCache(capacity=8, max_bytes=120)
+    big.put(((1,), 1, 0.0), 0, r1)               # 112 bytes: fits
+    big.put(((1, 2), 1, 0.0), 0, r12)            # 128 bytes: NEVER fits
+    assert big.oversized_rejects == 1 and len(big) == 1
+    assert big.nbytes == RuleCache.entry_nbytes(r1)
+    with pytest.raises(ValueError):
+        RuleCache(capacity=0)
+    with pytest.raises(ValueError):
+        RuleCache(max_bytes=0)
+
+
+def test_rule_server_append_prefetches_even_on_mining_refresh_error(
+        monkeypatch):
+    from repro.serve import MiningRefreshError
+
+    rng = np.random.default_rng(43)
+    tx = _db(rng, 150, 10)
+    y = _labels(rng, tx)
+    srv = CountServer(tx, classes=y)
+    ruler = RuleServer(srv, prefetch_top=2)
+    srv.mine(0.1)
+    ruler.rules_for([(0,), (1,)], min_conf=0.1)
+    monkeypatch.setattr(srv, "_refresh_frequent",
+                        lambda inc: (_ for _ in ()).throw(RuntimeError("x")))
+    batch = _db(rng, 30, 10)
+    with pytest.raises(MiningRefreshError):
+        ruler.append(batch, classes=_labels(rng, batch))
+    # the batch IS committed: the rule path purged + re-warmed at the new
+    # version anyway — no stale verdict can survive the failed refresh
+    v = srv.store.version
+    assert v == 1 and ruler.n_prefetches == 1
+    assert ruler.cache._d and all(k[1] == v for k in ruler.cache._d)
+
+
+# ------------------------------------------- optimal_rule_set property test
+_EPS = 1e-12
+_CONFS = [0.2, 0.5 - 5e-13, 0.5, 0.5 + 5e-13, 0.5 + 4e-12, 0.8, 1.0]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 15 * len(_CONFS) - 1),
+                min_size=0, max_size=24))
+def test_optimal_rule_set_matches_bruteforce_domination(codes):
+    """Subset-enumeration filter == brute-force pairwise domination oracle,
+    with confidence ties exercised within/just-outside the eps band."""
+    rules, seen = [], set()
+    for code in codes:
+        mask = code % 15 + 1                      # non-empty subset of 4 items
+        conf = _CONFS[code // 15]
+        ante = tuple(a for a in range(4) if (mask >> a) & 1)
+        if ante in seen:                          # one confidence per ante,
+            continue                              # like a real mined rule set
+        seen.add(ante)
+        rules.append(Rule(ante, 1, 0.1, conf, 10, 5))
+    got = optimal_rule_set(rules)
+    brute = [r for r in rules
+             if not any(set(s.antecedent) < set(r.antecedent)
+                        and s.confidence >= r.confidence - _EPS
+                        for s in rules)]
+    assert got == brute
+    # every survivor satisfies the published invariant checker too
+    from repro.core import is_optimal_set
+    assert is_optimal_set(got, rules)
+
+
+# --------------------------------------------------- mesh psum path (slow)
+MESH_RULES_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+from repro.core import minority_report, optimal_rule_set
+from repro.serve import CountServer, RuleServer
+
+rng = np.random.default_rng(61)
+def _db(rows, items, p=0.3):
+    return [[int(a) for a in range(items) if rng.random() < p]
+            for _ in range(rows)]
+
+tx = _db(300, 24)
+y = [int(rng.random() < 0.35) for _ in tx]
+mesh = jax.make_mesh((4,), ("data",))
+ruler = RuleServer(CountServer(tx, classes=y, shards=4, mesh=mesh))
+hist, ys = [list(t) for t in tx], list(y)
+for rnd in range(3):                       # initial + 2 append rounds
+    res = minority_report(hist, ys, target_class=1, min_support=0.04,
+                          min_confidence=0.36)
+    assert res.rules, "oracle mined no rules"
+    assert ruler.top_rules(0.04, 0.36) == res.rules, rnd
+    assert ruler.top_rules(0.04, 0.36, optimal=True) \
+        == optimal_rule_set(res.rules), rnd
+    antes = [r.antecedent for r in res.rules]
+    assert ruler.rules_for(antes, min_conf=0.36) == res.rules, rnd
+    if rnd < 2:
+        batch = _db(120, 24 + 4 * rnd)
+        yb = [int(rng.random() < 0.35) for _ in batch]
+        ruler.append(batch, classes=yb)
+        hist += [list(t) for t in batch]
+        ys += yb
+print(json.dumps({"ok": True,
+                  "launches": ruler.server.store.kernel_launches}))
+"""
+
+
+@pytest.mark.slow
+def test_rule_parity_sharded_mesh_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", MESH_RULES_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["launches"] > 0
+
+
+def test_serve_counts_launcher_rules_mode():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_counts", "--rows", "600",
+         "--items", "16", "--rounds", "3", "--batch", "8", "--appends", "2",
+         "--append-rows", "100", "--pool", "32", "--p-y", "0.35",
+         "--theta", "0.03", "--rules", "--min-conf", "0.3", "--verify"],
+        env=env, capture_output=True, text=True, timeout=300, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout[-1500:] + proc.stderr[-1500:]
+    assert "rules:" in proc.stdout
+    assert "== host minority_report" in proc.stdout

@@ -739,7 +739,11 @@ def test_sharded_mine_parity_kill_resume_and_stale_version(tmp_path):
     assert state["partial"]["level"] == 2
     assert state["partial"]["next_chunk"] == 2
     assert state["partial"]["n_shards"] == 3      # shard grid in signature
-    assert state["meta"] == {"version": 0, "n_shards": 3}
+    # meta = backend identity + the MINING-PARAMETER identity (a checkpoint
+    # must not answer a resume with a different threshold/class/cap)
+    assert state["meta"] == {"version": 0, "n_shards": 3,
+                             "min_count": 40.0, "class_column": None,
+                             "max_len": 0}
 
     resumed = []
     got = versioned_mine_frequent(

@@ -23,6 +23,11 @@ python -m repro.launch.serve_counts --rows 2000 --items 24 --rounds 4 \
     --batch 16 --appends 1 --append-rows 300 --pool 64 --shards 2 \
     --async-flush --max-delay-ms 25 --theta 0.08 --verify
 
+echo "=== rule-serve smoke (minority rules over the count path + verify) ==="
+python -m repro.launch.serve_counts --rows 2000 --items 24 --rounds 4 \
+    --batch 16 --appends 2 --append-rows 300 --pool 64 --p-y 0.2 \
+    --theta 0.02 --rules --min-conf 0.1 --verify
+
 echo "=== mine-loop smoke (cross-backend parity + driver bench sanity) ==="
 python -m pytest -q tests/test_mining_driver.py
 python -m benchmarks.mine_loop --smoke
@@ -38,3 +43,6 @@ python -m benchmarks.mine_loop --json BENCH_mine.json
 
 echo "=== shard-serve perf record ==="
 python -m benchmarks.shard_serve --json BENCH_shard.json
+
+echo "=== rule-serve perf record ==="
+python -m benchmarks.rule_serve --json BENCH_rules.json
