@@ -1,0 +1,165 @@
+"""GFP-hybrid vs level-wise sweep: kernel launches per mine and wall time.
+
+The level-wise engines pay one whole-DB kernel launch per candidate level;
+the GFP hybrid (``repro/mining/gfp_backend.py``) counts each level's
+candidates against per-tail-item conditional pattern bases — blocks small
+enough to count on the host pay NO launch at all, larger ones pay one launch
+per tree item.  On a dense long-pattern workload (the FP-growth home turf:
+high density, heavy prefix compression, mining depth >= 4) this bench
+records launches-per-mine and wall time for:
+
+  levelwise/dense  — the driver over ``DenseBackend`` (one launch per level)
+  gfp/hybrid       — the driver over ``GFPBackend`` (host/kernel per block)
+  gfp/device-only  — ``host_rows=0`` ablation: every conditional block goes
+                     through the kernel (quantifies the hybrid's host side)
+
+  PYTHONPATH=src python -m benchmarks.gfp_hybrid [--json BENCH_gfp.json]
+  PYTHONPATH=src python -m benchmarks.gfp_hybrid --smoke   # CI sanity check
+
+Exactness is asserted for every variant (identical frequent dicts), and the
+regression gate is enforced on every run: at mining depth >=
+``GATE_MIN_DEPTH`` the hybrid must show at least ``GATE_MIN_REDUCTION``x
+fewer kernel launches than the level-wise sweep.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.mining import (DenseBackend, DenseDB, GFPBackend,
+                          mine_frequent_backend)
+
+from .common import Row
+
+N, M, P, MIN_COUNT = 30_000, 12, 0.55, 900
+SMOKE = (3_000, 10, 0.55, 90)
+REPEATS = 3
+
+GATE_MIN_REDUCTION = 2.0   # hybrid must launch >= 2x less than level-wise
+GATE_MIN_DEPTH = 4         # ... at a mining depth where levels pile up
+
+
+def _transactions(n: int, m: int, p: float, seed: int = 0) -> List[List[int]]:
+    rng = np.random.default_rng(seed)
+    mat = rng.random((n, m)) < p
+    return [np.flatnonzero(row).tolist() for row in mat]
+
+
+class _CountingDense(DenseBackend):
+    """DenseBackend with a kernel-launch counter (one launch per counts())."""
+
+    def __init__(self, db, **kw):
+        super().__init__(db, **kw)
+        self.kernel_launches = 0
+
+    def counts(self, masks, *, start_chunk=0, init=None, on_chunk=None):
+        if start_chunk < self.n_count_chunks and masks.shape[0]:
+            self.kernel_launches += 1
+        return super().counts(masks, start_chunk=start_chunk, init=init,
+                              on_chunk=on_chunk)
+
+
+def _best_run(make_backend, min_count, repeats):
+    """Fastest of ``repeats`` full mines, each on a FRESH backend (no warm
+    conditional-block cache): (seconds, launches, host_blocks, result)."""
+    best = None
+    for _ in range(repeats):
+        backend = make_backend()
+        t0 = time.perf_counter()
+        got = mine_frequent_backend(backend, min_count)
+        dt = time.perf_counter() - t0
+        if best is None or dt < best[0]:
+            best = (dt, backend.kernel_launches,
+                    getattr(backend, "host_blocks", 0), got)
+    return best
+
+
+def run(record: Optional[List[dict]] = None, smoke: bool = False,
+        repeats: int = REPEATS) -> List[Row]:
+    n, m, p, min_count = SMOKE if smoke else (N, M, P, MIN_COUNT)
+    tx = _transactions(n, m, p)
+    db = DenseDB.encode(tx)
+
+    variants = [
+        ("levelwise/dense", lambda: _CountingDense(db)),
+        ("gfp/hybrid", lambda: GFPBackend(db)),
+        ("gfp/device-only", lambda: GFPBackend(db, host_rows=0)),
+    ]
+
+    rows: List[Row] = []
+    results: Dict[str, Dict[Tuple[int, ...], int]] = {}
+    launches: Dict[str, int] = {}
+    for name, make in variants:
+        dt, nl, host_blocks, got = _best_run(make, min_count, repeats)
+        results[name] = got
+        launches[name] = nl
+        rows.append((f"gfp_hybrid/{name}", dt * 1e6,
+                     f"launches={nl};host_blocks={host_blocks};"
+                     f"frequent={len(got)}"))
+        if record is not None:
+            record.append({"variant": name, "total_us": dt * 1e6,
+                           "kernel_launches": nl,
+                           "host_blocks": host_blocks,
+                           "n_frequent": len(got)})
+
+    # exactness: all three count paths produce the identical frequent dict
+    assert results["gfp/hybrid"] == results["levelwise/dense"]
+    assert results["gfp/device-only"] == results["levelwise/dense"]
+
+    # the regression gate: a dense long-pattern mine (depth >= 4) must show
+    # the headline launch reduction, every run
+    depth = max(len(k) for k in results["levelwise/dense"])
+    assert depth >= GATE_MIN_DEPTH, \
+        f"workload too shallow for the gate: depth {depth}"
+    reduction = launches["levelwise/dense"] / max(1, launches["gfp/hybrid"])
+    assert reduction >= GATE_MIN_REDUCTION, \
+        (f"launch reduction regressed: {reduction:.2f}x < "
+         f"{GATE_MIN_REDUCTION}x (levelwise {launches['levelwise/dense']}, "
+         f"hybrid {launches['gfp/hybrid']})")
+    rows.append(("gfp_hybrid/launch_reduction", reduction,
+                 f"depth={depth};gate>={GATE_MIN_REDUCTION}"))
+    if record is not None:
+        record.append({"variant": "launch_reduction", "ratio": reduction,
+                       "depth": depth, "gate": GATE_MIN_REDUCTION})
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_gfp.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem, exactness + gate only (no JSON)")
+    ap.add_argument("--repeats", type=int, default=REPEATS)
+    args = ap.parse_args()
+
+    record: Optional[List[dict]] = None if args.smoke else []
+    rows = run(record, smoke=args.smoke, repeats=args.repeats)
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.2f},{derived}")
+    if args.smoke:
+        print("gfp smoke OK (hybrid == level-wise, launch gate holds)")
+        return
+
+    payload = {
+        "bench": "gfp_hybrid",
+        "backend": jax.default_backend(),
+        "problem": {"n": N, "m": M, "p": P, "min_count": MIN_COUNT},
+        "gate": {"min_reduction": GATE_MIN_REDUCTION,
+                 "min_depth": GATE_MIN_DEPTH},
+        "rows": record,
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.json} ({len(record)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ serve   — micro-batched count serving vs per-query launches, cold/warm cache
 mine    — unified level-wise mining driver vs the legacy per-engine loops
 shard   — sharded-store throughput (1/2/4/8 shards) + async flush latency
 rules   — minority-rule serving cold/warm throughput + 1/2/4-shard parity
+gfp     — GFP-hybrid vs level-wise launches-per-mine on dense long patterns
 """
 import argparse
 import sys
@@ -21,7 +22,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig5", "fig6", "kernel", "scaling", "stream",
-                             "serve", "mine", "shard", "rules"])
+                             "serve", "mine", "shard", "rules", "gfp"])
     args = ap.parse_args()
 
     from .common import emit
@@ -54,6 +55,9 @@ def main() -> None:
     if args.only in (None, "rules"):
         from . import rule_serve
         suites["rules"] = rule_serve.run
+    if args.only in (None, "gfp"):
+        from . import gfp_hybrid
+        suites["gfp"] = gfp_hybrid.run
 
     print("name,us_per_call,derived")
     ok = True

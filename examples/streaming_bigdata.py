@@ -7,7 +7,7 @@ mid-level, the second resumes from the last completed chunk and still
 produces the exact rule set of the single-pass dense engine.
 
   PYTHONPATH=src python examples/streaming_bigdata.py [--rows N] \
-      [--chunk-rows C] [--ckpt mine.ckpt.json]
+      [--chunk-rows C] [--ckpt mine.ckpt.json] [--backend auto]
 
 With ``--ckpt PATH`` the resumable mine runs through the unified driver
 (``repro.mining.driver``) against that DURABLE path: Ctrl-C it mid-run,
@@ -15,6 +15,12 @@ re-run the same command, and it picks up from the last completed chunk —
 the same ``MiningCheckpoint`` contract every backend (dense, streaming,
 distributed, versioned serving store) now shares.  Without ``--ckpt`` the
 kill/resume cycle is simulated in-process under a temp file.
+
+``--backend`` selects the counting engine for the kill/resume mine:
+``streaming`` (default — the out-of-core demo this example is about),
+``dense``, ``gfp`` (the guided FP-growth hybrid), or ``auto`` — which asks
+the adaptive chooser (``repro.mining.chooser``) to pick from MEASURED
+dataset traits and prints its decision and the traits it was based on.
 """
 import argparse
 import os
@@ -23,8 +29,9 @@ import time
 
 from repro.core import minority_report
 from repro.data import bernoulli_db
-from repro.mining import (StreamingBackend, StreamingDB,
-                          mine_frequent_backend, minority_report_dense)
+from repro.mining import (DenseDB, StreamingBackend, StreamingDB,
+                          backend_for_db, mine_frequent_backend,
+                          minority_report_dense)
 from repro.mining.distributed import MiningCheckpoint
 
 
@@ -35,6 +42,10 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None,
                     help="durable MiningCheckpoint path: kill this process "
                          "mid-mine and re-run to resume from the last chunk")
+    ap.add_argument("--backend", default="streaming",
+                    choices=["streaming", "auto", "dense", "gfp"],
+                    help="counting engine for the kill/resume mine; auto "
+                         "consults the adaptive chooser over measured traits")
     args = ap.parse_args()
     rows, chunk_rows = args.rows, args.chunk_rows
 
@@ -55,7 +66,20 @@ def main() -> None:
 
     # ---- kill/resume through the unified driver ----------------------------
     sdb = StreamingDB.encode(tx, chunk_rows=chunk_rows)
-    backend = StreamingBackend(sdb)
+    if args.backend == "streaming":
+        backend = StreamingBackend(sdb)
+    else:
+        # the chooser path: measure the encoded DB, pick (or force) an
+        # engine, and say why — every engine speaks the same driver protocol,
+        # so the kill/resume flow below is unchanged
+        name = None if args.backend == "auto" else args.backend
+        backend, choice = backend_for_db(DenseDB.encode(tx), name=name)
+        print(f"backend: {choice.name} ({choice.reason})")
+        if choice.traits is not None:
+            t = choice.traits
+            print(f"traits: {t.n_rows} rows ({t.n_unique} unique, dedup "
+                  f"{t.dedup_ratio:.2f}), density {t.density:.2f}, "
+                  f"skew {t.skew:.1f}x, {t.nbytes} bytes")
     min_count = rows * 0.01
 
     if args.ckpt:
@@ -83,7 +107,8 @@ def main() -> None:
     fd, ckpt_path = tempfile.mkstemp(suffix=".mine.json")
     os.close(fd)
     ckpt = MiningCheckpoint(ckpt_path)
-    budget = sdb.n_chunks + sdb.n_chunks // 2  # die mid-way through level 2
+    n_chunks = backend.n_count_chunks
+    budget = n_chunks + n_chunks // 2          # die mid-way through level 2
 
     class _Preempted(Exception):
         pass
@@ -95,22 +120,27 @@ def main() -> None:
         if len(seen) >= budget:
             raise _Preempted()
 
+    preempted = False
     try:
         mine_frequent_backend(backend, min_count, checkpoint=ckpt,
                               on_chunk=die_midway)
         print("db too small to be preempted mid-level; try more rows")
     except _Preempted:
+        preempted = True
         level, chunk = seen[-1]
-        print(f"killed at level {level}, chunk {chunk + 1}/{sdb.n_chunks}")
+        print(f"killed at level {level}, chunk {chunk + 1}/{n_chunks}")
 
-    resumed = []
-    got = mine_frequent_backend(backend, min_count, checkpoint=ckpt,
-                                on_chunk=lambda l, c: resumed.append((l, c)))
-    want = mine_frequent_backend(backend, min_count)
-    assert got == want
-    print(f"resumed at level {resumed[0][0]}, chunk {resumed[0][1] + 1} — "
-          f"{len(resumed)} chunk-counts instead of {len(seen) + len(resumed)}"
-          f"+; {len(got)} frequent itemsets, identical to uninterrupted run")
+    if preempted:
+        resumed = []
+        got = mine_frequent_backend(backend, min_count, checkpoint=ckpt,
+                                    on_chunk=lambda l, c:
+                                    resumed.append((l, c)))
+        want = mine_frequent_backend(backend, min_count)
+        assert got == want
+        print(f"resumed at level {resumed[0][0]}, chunk {resumed[0][1] + 1}"
+              f" — {len(resumed)} chunk-counts instead of "
+              f"{len(seen) + len(resumed)}+; {len(got)} frequent itemsets, "
+              f"identical to uninterrupted run")
     os.unlink(ckpt_path)
 
 

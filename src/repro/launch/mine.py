@@ -7,6 +7,11 @@ Runs the Minority-Report pipeline with the TPU-native engine over a local
 mesh (transactions sharded over 'data', targets over 'model'), checkpointing
 per level; cross-validates the rule set against the paper-faithful host
 implementation when --verify.
+
+``--backend`` switches from the MRA pipeline (default ``mra``) to a plain
+frequent-itemset mine through a chosen counting engine: ``auto`` consults
+the adaptive chooser (``mining/chooser.py``) over measured DB traits and
+prints its decision; ``dense``/``streaming``/``gfp`` force an engine.
 """
 import argparse
 import time
@@ -31,6 +36,12 @@ def main() -> None:
     ap.add_argument("--chunk-rows", type=int, default=None,
                     help="rows per streamed chunk (default: staging-budget "
                          "heuristic, see mining/plan.py)")
+    ap.add_argument("--backend", default="mra",
+                    choices=["mra", "auto", "dense", "streaming", "gfp"],
+                    help="mra (default): the full Minority-Report pipeline; "
+                         "otherwise mine frequent itemsets through the named "
+                         "engine — auto consults the adaptive chooser over "
+                         "measured DB traits")
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -56,6 +67,10 @@ def main() -> None:
                      else f"level {state['level']} complete")
             print(f"resuming from checkpoint {args.ckpt}: {where}, "
                   f"{len(state['frequent'])} itemsets banked")
+
+    if args.backend != "mra":
+        _mine_backend(tx, args, ckpt)
+        return
     t0 = time.time()
     res = minority_report_dense(
         tx, y, min_support=args.min_support, min_confidence=args.min_conf,
@@ -79,6 +94,43 @@ def main() -> None:
         assert a == b, "dense/host rule mismatch!"
         print(f"verified against paper-faithful engine ({t_host:.2f}s): "
               f"{len(b)} rules identical")
+
+
+def _mine_backend(tx, args, ckpt) -> None:
+    """Plain frequent-itemset mine through a chooser-selected (or forced)
+    counting backend, with the chooser's decision printed."""
+    import time as _time
+
+    from ..core.incremental import ceil_count
+    from ..mining import DenseDB, backend_for_db, mine_frequent_backend
+
+    db = DenseDB.encode(tx)
+    name = None if args.backend == "auto" else args.backend
+    backend, choice = backend_for_db(db, name=name)
+    print(f"backend: {choice.name} ({choice.reason})")
+    if choice.traits is not None:
+        t = choice.traits
+        print(f"traits: {t.n_rows} rows ({t.n_unique} unique, "
+              f"dedup {t.dedup_ratio:.2f}), density {t.density:.2f}, "
+              f"skew {t.skew:.1f}x, {t.nbytes} bytes")
+
+    min_count = ceil_count(args.min_support * len(tx))
+    t0 = _time.time()
+    frequent = mine_frequent_backend(backend, min_count, checkpoint=ckpt)
+    dt = _time.time() - t0
+    launches = getattr(backend, "kernel_launches", None)
+    extra = "" if launches is None else f", {launches} kernel launches"
+    print(f"{choice.name} engine: {len(frequent)} frequent itemsets at "
+          f"min_count={min_count} in {dt:.2f}s{extra}")
+
+    if args.verify:
+        from ..core import mine_frequent
+        t0 = _time.time()
+        want = mine_frequent(tx, min_count)
+        t_host = _time.time() - t0
+        assert frequent == want, "backend/host frequent-set mismatch!"
+        print(f"verified against paper-faithful engine ({t_host:.2f}s): "
+              f"{len(want)} itemsets identical")
 
 
 if __name__ == "__main__":

@@ -38,12 +38,30 @@ captured here:
       item without a kernel launch (the dense engine's host column sums).
       ``None`` means level 1 is counted through ``counts`` like any level.
 
+  ``traits() -> Optional[DatasetTraits]``
+      Optional measured dataset characteristics
+      (:class:`~repro.mining.chooser.DatasetTraits`: row count, footprint,
+      density, item skew, dedup ratio) for the adaptive backend chooser.
+      ``None`` means the engine cannot cheaply inspect its rows; callers
+      fall back to whatever they were explicitly given.
+
 plus ``vocab`` / ``n_rows`` / ``n_classes`` / ``nbytes`` for introspection
 and backend selection heuristics.
 
-This module implements the protocol for the three mining-layer engines; the
-serving store's :class:`~repro.serve.store.VersionedCountBackend` lives with
-the store (serving composes on mining, never the reverse).
+Backend selection is no longer a bare size threshold: ``mining/chooser.py``
+maps measured traits to an engine (first match wins) — a multi-device mesh
+picks ``distributed``; a footprint beyond the device-residency threshold
+picks ``streaming``; tiny DBs pick ``dense``; deep mines over dense-and-
+compressible or heavily item-skewed data pick the ``gfp`` hybrid
+(:class:`~repro.mining.gfp_backend.GFPBackend`, conditional-pattern-base
+counting batched per tree item); everything else keeps the level-wise
+``dense`` sweep.  All engines are exact, so the choice is purely a
+performance policy.
+
+This module implements the protocol for the mining-layer engines (the GFP
+hybrid lives in ``mining/gfp_backend.py``); the serving store's
+:class:`~repro.serve.store.VersionedCountBackend` lives with the store
+(serving composes on mining, never the reverse).
 """
 from __future__ import annotations
 
@@ -88,6 +106,11 @@ class CountBackend:
     def item_counts(self) -> Optional[np.ndarray]:
         return None
 
+    def traits(self):
+        """Measured dataset characteristics for the adaptive chooser, or
+        ``None`` when the engine cannot cheaply inspect its rows."""
+        return None
+
     def counts(self, masks: np.ndarray, *, start_chunk: int = 0,
                init: Optional[np.ndarray] = None,
                on_chunk: ChunkHook = None) -> np.ndarray:
@@ -124,6 +147,10 @@ class DenseBackend(CountBackend):
 
     def chunk_signature(self) -> dict:
         return {"backend": "dense", "n_rows": int(self.db.bits.shape[0])}
+
+    def traits(self):
+        from .chooser import DatasetTraits
+        return DatasetTraits.of_db(self.db)
 
     def item_counts(self) -> np.ndarray:
         """Level-1 shortcut: per-item counts from host column sums (exact,
@@ -171,6 +198,10 @@ class StreamingBackend(CountBackend):
         return {"chunk_rows": self.db.chunk_rows,
                 "n_rows": int(self.db.bits.shape[0])}
 
+    def traits(self):
+        from .chooser import DatasetTraits
+        return DatasetTraits.of_db(self.db)
+
     def counts(self, masks, *, start_chunk=0, init=None, on_chunk=None):
         rows = streaming_counts(
             self.db.bits, masks, self.db.weights,
@@ -181,26 +212,52 @@ class StreamingBackend(CountBackend):
 
 
 class DistributedBackend(CountBackend):
-    """Mesh-sharded counting: wraps any ``(masks) -> (K, C)`` launch closure
-    (see :class:`~repro.mining.distributed.DistributedMiner`, which shards N
-    over the data axes and K over the model axis)."""
+    """Mesh-sharded counting: wraps a sharded launch closure (see
+    :class:`~repro.mining.distributed.DistributedMiner`, which shards N over
+    the data axes and K over the model axis).
 
-    def __init__(self, count_fn: Callable[[np.ndarray], np.ndarray],
+    With ``n_chunks == 1`` (the default) the closure is ``(masks) -> (K, C)``
+    and the single-chunk resume discipline applies.  With ``chunk_rows``
+    set, the closure must accept the resume keywords (``start_chunk`` /
+    ``init`` / ``on_chunk`` — ``distributed_counts`` with its ``chunk_rows``
+    sweep) and the backend exposes the sweep's chunk grid to the driver, so
+    a mesh mine checkpoints mid-level."""
+
+    def __init__(self, count_fn: Callable[..., np.ndarray],
                  vocab: ItemVocab, n_rows: int, n_classes: int,
-                 nbytes: int = 0):
+                 nbytes: int = 0, *, n_chunks: int = 1,
+                 chunk_rows: Optional[int] = None):
         self._count_fn = count_fn
         self.vocab = vocab
         self.n_rows = n_rows
         self.n_classes = n_classes
         self._nbytes = nbytes
+        self._n_chunks = int(n_chunks)
+        self.chunk_rows = chunk_rows
 
     @property
     def nbytes(self) -> int:
         return self._nbytes
 
+    @property
+    def n_count_chunks(self) -> int:
+        return self._n_chunks
+
     def chunk_signature(self) -> dict:
-        return {"backend": "distributed", "n_rows": self.n_rows}
+        sig = {"backend": "distributed", "n_rows": self.n_rows}
+        if self._n_chunks > 1:
+            # chunked geometry: mid-level partials only transfer between
+            # identical chunk_rows sweeps
+            sig["chunk_rows"] = self.chunk_rows
+        return sig
 
     def counts(self, masks, *, start_chunk=0, init=None, on_chunk=None):
-        return self._single_chunk(self._count_fn, masks, start_chunk, init,
-                                  on_chunk)
+        if self._n_chunks == 1:
+            return self._single_chunk(self._count_fn, masks, start_chunk,
+                                      init, on_chunk)
+        k = int(masks.shape[0])
+        if k == 0:
+            return (np.zeros((0, self.n_classes), np.int32) if init is None
+                    else np.array(np.asarray(init), np.int32))
+        return np.asarray(self._count_fn(masks, start_chunk=start_chunk,
+                                         init=init, on_chunk=on_chunk))

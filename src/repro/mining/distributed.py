@@ -85,6 +85,9 @@ def distributed_counts(
     model_axis: Optional[str] = "model",
     use_kernel: bool = True,
     chunk_rows: Optional[int] = None,
+    start_chunk: int = 0,
+    init: Optional[np.ndarray] = None,
+    on_chunk=None,
 ) -> np.ndarray:              # (K, C) int32
     """Exact counts on a mesh: N over data axes, K over the model axis.
 
@@ -93,6 +96,12 @@ def distributed_counts(
     sharded over the data axes), so per-device residency is
     O(chunk_rows / data_size) regardless of total N.  Counts are int32 sums —
     the chunked sweep is bit-identical to the single pass.
+
+    ``start_chunk`` / ``init`` / ``on_chunk`` follow the streaming resume
+    discipline (``mining/stream.py``): ``on_chunk(j, acc)`` fires after
+    chunk ``j`` with the running int32 accumulator, and a resumed sweep
+    seeded with a checkpointed accumulator skips the chunks already counted
+    — the driver's mid-level checkpoint hook, now available on a mesh.
     """
     k, w = tgt_bits.shape
     n, c = weights.shape
@@ -118,8 +127,13 @@ def distributed_counts(
         tgt_d = jnp.asarray(tgt_p)
         txc = np.zeros((n_pad, tx_bits.shape[1]), np.uint32)
         wc = np.zeros((n_pad, c), np.int32)
-        total = np.zeros((k, c), np.int64)
-        for s, e in stream_chunks(n, chunk_rows):
+        total = (np.zeros((k, c), np.int64) if init is None
+                 else np.asarray(init).astype(np.int64))
+        chunks = stream_chunks(n, chunk_rows)
+        if start_chunk >= len(chunks):
+            return total.astype(np.int32)  # fully counted: resume is a no-op
+        for j in range(start_chunk, len(chunks)):
+            s, e = chunks[j]
             txc[: e - s] = tx_bits[s:e]
             txc[e - s:] = 0
             wc[: e - s] = weights[s:e]
@@ -129,16 +143,24 @@ def distributed_counts(
             # every count under int32, so the final cast cannot wrap.
             total += np.asarray(count_shard(jnp.asarray(txc), tgt_d,
                                             jnp.asarray(wc)))[:k]
+            if on_chunk is not None:
+                on_chunk(j, total.astype(np.int32))
         return total.astype(np.int32)
 
+    base = (np.zeros((k, c), np.int32) if init is None
+            else np.array(np.asarray(init), np.int32))
+    if start_chunk >= 1:
+        return base                        # single-chunk resume discipline
     n_pad = _round_up(max(n, 1), dsize)
     tx_p = np.zeros((n_pad, tx_bits.shape[1]), np.uint32)
     tx_p[:n] = tx_bits
     w_p = np.zeros((n_pad, c), np.int32)
     w_p[:n] = weights
-    out = np.asarray(count_shard(jnp.asarray(tx_p), jnp.asarray(tgt_p),
-                                 jnp.asarray(w_p)))
-    return out[:k]
+    out = base + np.asarray(count_shard(jnp.asarray(tx_p), jnp.asarray(tgt_p),
+                                        jnp.asarray(w_p)))[:k]
+    if on_chunk is not None:
+        on_chunk(0, out)
+    return out
 
 
 def place_rows(
@@ -297,6 +319,32 @@ class DistributedMiner:
                 out[key] = row
         return out
 
+    def backend(self, tx_bits: np.ndarray, weights: np.ndarray,
+                vocab: ItemVocab):
+        """The miner's :class:`~repro.mining.backend.DistributedBackend` over
+        host arrays.  With ``chunk_rows`` active the backend exposes the
+        N-axis sweep's chunk grid to the driver (one resumable chunk per
+        host chunk), so a mesh mine checkpoints MID-level — the sharding
+        composition's last gap."""
+        from .backend import DistributedBackend
+        from .plan import stream_chunks
+
+        n = int(tx_bits.shape[0])
+        nbytes = int(tx_bits.nbytes + weights.nbytes)
+        if self.chunk_rows is not None and 0 < self.chunk_rows < n:
+            return DistributedBackend(
+                lambda masks, **kw: distributed_counts(
+                    tx_bits, masks, weights, self.mesh,
+                    data_axes=self.data_axes, model_axis=self.model_axis,
+                    use_kernel=self.use_kernel, chunk_rows=self.chunk_rows,
+                    **kw),
+                vocab, n, int(weights.shape[1]), nbytes=nbytes,
+                n_chunks=len(stream_chunks(n, self.chunk_rows)),
+                chunk_rows=self.chunk_rows)
+        return DistributedBackend(
+            lambda masks: self.counts(tx_bits, masks, weights),
+            vocab, n, int(weights.shape[1]), nbytes=nbytes)
+
     def mine_frequent(
         self,
         tx_bits: np.ndarray,
@@ -306,18 +354,17 @@ class DistributedMiner:
         *,
         class_column: Optional[int] = None,
         max_len: int = 0,
+        on_chunk=None,
     ) -> Dict[Tuple[Item, ...], int]:
         """Shim over the unified driver (``mining/driver.py``): one mesh
         counting launch per level (singles included), per-level checkpoint
-        saves — plus the driver's mid-level partial, so a restart (possibly
-        on a DIFFERENT mesh shape: the signature is mesh-independent) skips
-        any fully-counted level."""
-        from .backend import DistributedBackend
+        saves — plus the driver's mid-level partial at N-chunk granularity
+        when ``chunk_rows`` is active, so a restart (possibly on a DIFFERENT
+        mesh shape: the signature is mesh-independent) skips any counted
+        level AND any counted chunk of the in-flight level."""
         from .driver import mine_frequent as _driver_mine
 
-        backend = DistributedBackend(
-            lambda masks: self.counts(tx_bits, masks, weights),
-            vocab, int(tx_bits.shape[0]), int(weights.shape[1]),
-            nbytes=int(tx_bits.nbytes + weights.nbytes))
+        backend = self.backend(tx_bits, weights, vocab)
         return _driver_mine(backend, min_count, class_column=class_column,
-                            max_len=max_len, checkpoint=self.checkpoint)
+                            max_len=max_len, checkpoint=self.checkpoint,
+                            on_chunk=on_chunk)

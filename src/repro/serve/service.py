@@ -140,6 +140,7 @@ class CountServer:
             CountCache(cache_size, max_bytes=cache_bytes) if cache else None
         self.n_flushes = 0
         self.n_queries_served = 0
+        self.last_backend_choice = None   # BackendChoice of the last mine()
         self._theta: Optional[float] = None
         self._frequent: Dict[Key, int] = {}
         # every state-touching op serializes behind ONE re-entrant lock when
@@ -292,8 +293,44 @@ class CountServer:
                     raise MiningRefreshError(version, e) from e
             return version
 
+    def _mining_backend(self, which: str):
+        """Resolve the counting backend for ``mine``: the adaptive chooser
+        over measured store traits (``which == "auto"``), or an explicit
+        engine name.  A sharded store always mines through its own
+        all-reduced backend (shards are the residency decision).  Returns
+        ``(backend, BackendChoice)``."""
+        from ..mining.chooser import BackendChoice, choose_backend
+        from .store import VersionedCountBackend
+
+        if isinstance(self.store, ShardedDB):
+            return ShardedCountBackend(self.store), BackendChoice(
+                "store", "sharded store: mine through the all-reduced "
+                "composed sweep")
+        composed = VersionedCountBackend(self.store)
+        if which == "store":
+            return composed, BackendChoice(
+                "store", "explicitly requested: composed base+delta sweep")
+        if which == "auto":
+            choice = choose_backend(composed.traits())
+        elif which in ("dense", "streaming", "gfp", "distributed"):
+            choice = BackendChoice(which, "explicitly requested")
+        else:
+            raise ValueError(
+                f"unknown mining backend {which!r}: expected auto, store, "
+                "dense, streaming, or gfp")
+        if choice.name == "gfp":
+            from ..mining.gfp_backend import GFPBackend
+            return GFPBackend.from_store(
+                self.store, use_kernel=self.store.use_kernel), choice
+        # dense / streaming / distributed verdicts all mine through the
+        # store's composed sweep: residency is the STORE's decision (its
+        # base is already dense or streaming by the same traits), and a
+        # serving store has no mesh to shard over
+        return composed, choice
+
     def mine(self, theta: float, *, checkpoint=None,
-             class_column: Optional[int] = None) -> Dict[Key, int]:
+             class_column: Optional[int] = None,
+             backend: str = "auto") -> Dict[Key, int]:
         """Bootstrap exact frequent-itemset mining at relative threshold
         ``theta``; subsequent ``append`` calls maintain it incrementally.
 
@@ -309,7 +346,16 @@ class CountServer:
         with C_class >= ceil_count(theta * n_rows)).  A class-guided mine is
         a QUERY, not a baseline: it returns the frequent set without arming
         §5.2 incremental maintenance, whose pigeonhole argument is stated on
-        total counts."""
+        total counts.
+
+        ``backend`` picks the counting engine: ``"auto"`` (default) consults
+        the adaptive chooser over measured store traits — the GFP-growth
+        hybrid on dense/compressible/skewed data, the store's composed sweep
+        otherwise; ``"store"`` forces the composed base+delta sweep;
+        ``"gfp"``/``"dense"``/``"streaming"`` force an engine.  Every engine
+        is exact, so the choice never changes the result (pinned by
+        ``tests/test_chooser.py``); the decision taken is recorded on
+        ``last_backend_choice``."""
         if not (0.0 < theta <= 1.0):
             raise ValueError("theta in (0, 1]")
         if class_column is not None and \
@@ -318,9 +364,19 @@ class CountServer:
                 f"class_column {class_column} out of range for "
                 f"n_classes={self.store.n_classes}")
         with self._lock:
-            frequent = versioned_mine_frequent(
-                self.store, ceil_count(theta * self.store.n_rows),
-                class_column=class_column, checkpoint=checkpoint)
+            be, choice = self._mining_backend(backend)
+            self.last_backend_choice = choice
+            mc = ceil_count(theta * self.store.n_rows)
+            if choice.name == "gfp":
+                from ..mining.driver import mine_frequent as _driver_mine
+                frequent = _driver_mine(be, mc, class_column=class_column,
+                                        checkpoint=checkpoint)
+            else:
+                # every composed verdict mines through the module-level shim
+                # (module-level on purpose: it is the failure-injection seam)
+                frequent = versioned_mine_frequent(
+                    self.store, mc, class_column=class_column,
+                    checkpoint=checkpoint)
             if class_column is None:
                 # commit only after the mine succeeds: a failed mine must not
                 # arm incremental maintenance over an empty/stale baseline

@@ -104,6 +104,9 @@ class VersionedDB:
         self._delta_weights: Optional[np.ndarray] = None  # (D, C) int32
         self._delta_device = None   # (bits, weights) device mirror, lazy
         self._class_totals = np.zeros(self.n_classes, np.int64)
+        # the adaptive chooser's residency decision for the CURRENT base
+        # (None when residency was explicitly forced by the caller)
+        self.backend_choice = None
 
         transactions = [list(t) for t in transactions]
         self.vocab = vocab if vocab is not None else \
@@ -143,12 +146,25 @@ class VersionedDB:
 
     def _make_base(self, bits: np.ndarray, weights: np.ndarray):
         stream = self._streaming
-        if stream is None:
+        if stream is None and self.chunk_rows is not None:
             # explicit chunk_rows opts in, mirroring _resolve_streaming in
-            # the mining stack; otherwise select by encoded size
-            stream = (self.chunk_rows is not None
-                      or (bits.nbytes + weights.nbytes)
-                      > self._stream_threshold)
+            # the mining stack
+            stream = True
+        if stream is None:
+            # adaptive residency: the chooser measures the encoded rows
+            # (footprint, density, skew, compressibility) instead of the old
+            # bare size threshold.  Residency only has two states, so any
+            # non-"streaming" verdict keeps the base device-dense — the
+            # measured choice itself is kept (stats + CountServer.mine
+            # consult it for the engine pick)
+            from ..mining.chooser import DatasetTraits, choose_backend
+            traits = DatasetTraits.measure(bits, weights, self.vocab,
+                                           self.n_rows)
+            self.backend_choice = choose_backend(
+                traits, stream_threshold_bytes=self._stream_threshold)
+            stream = self.backend_choice.name == "streaming"
+        else:
+            self.backend_choice = None
         if stream:
             return StreamingDB.from_arrays(self.vocab, bits, weights,
                                            self.n_rows, self.n_classes,
@@ -187,6 +203,8 @@ class VersionedDB:
             "kernel_launches": self.kernel_launches,
             "appends": self.n_appends, "compactions": self.n_compactions,
             "failed_compactions": self.n_failed_compactions,
+            "backend_choice": (None if self.backend_choice is None
+                               else self.backend_choice.name),
         }
 
     # -- append ---------------------------------------------------------------
@@ -403,6 +421,21 @@ class VersionedCountBackend(CountBackend):
 
     def mine_signature(self) -> dict:
         return {"version": self.store.version}
+
+    def traits(self):
+        """Measured traits over the composed base+delta rows (the same rows
+        every sweep counts), for the adaptive engine pick in
+        ``CountServer.mine``."""
+        from ..mining.chooser import DatasetTraits
+
+        store = self.store
+        w_now = store.vocab.n_words
+        bits = pad_words(np.asarray(store.base.bits), w_now)
+        wts = np.asarray(store.base.weights)
+        if store._delta_bits is not None:
+            bits = np.concatenate([bits, pad_words(store._delta_bits, w_now)])
+            wts = np.concatenate([wts, store._delta_weights])
+        return DatasetTraits.measure(bits, wts, store.vocab, store.n_rows)
 
     def counts(self, masks: np.ndarray, *, start_chunk: int = 0,
                init: Optional[np.ndarray] = None, on_chunk=None) -> np.ndarray:

@@ -1,0 +1,151 @@
+"""Adaptive backend chooser: decision-table pins + result invariance.
+
+The chooser maps measured dataset traits to an engine; every engine is
+exact, so the pins below are PERFORMANCE-policy regression tests (a changed
+threshold shows up as a changed decision), and the invariance tests assert
+the part that must never change: identical mining results whichever backend
+is selected.
+"""
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import mine_frequent
+from repro.core.incremental import ceil_count
+from repro.mining import (DatasetTraits, DenseDB, GFPBackend,
+                          backend_for_db, choose_backend,
+                          mine_frequent_backend)
+from repro.mining.backend import DenseBackend, StreamingBackend
+from repro.serve import CountServer, VersionedCountBackend, VersionedDB
+
+
+def _traits(**kw):
+    base = dict(n_rows=10_000, n_unique=9_000, vocab_size=24, n_classes=1,
+                nbytes=1 << 20, density=0.05, skew=1.5, dedup_ratio=0.9)
+    base.update(kw)
+    return DatasetTraits(**base)
+
+
+def _tx(seed, n, m, p):
+    rng = np.random.default_rng(seed)
+    return [[i for i in range(m) if rng.random() < p] for _ in range(n)]
+
+
+# ----------------------------------------------------------- decision table
+def test_decision_table_pins():
+    # dense + compressible, deep mine -> the GFP hybrid
+    assert choose_backend(
+        _traits(density=0.5, dedup_ratio=0.3)).name == "gfp"
+    # heavy item skew alone also routes to GFP
+    assert choose_backend(_traits(skew=10.0)).name == "gfp"
+    # sparse, uniform, incompressible -> level-wise dense sweep
+    assert choose_backend(_traits()).name == "dense"
+    # footprint beyond device residency -> streaming, whatever else holds
+    assert choose_backend(
+        _traits(nbytes=600 << 20, density=0.5, dedup_ratio=0.3,
+                skew=10.0)).name == "streaming"
+    # tiny DBs never leave the dense sweep
+    assert choose_backend(
+        _traits(n_rows=500, density=0.5, dedup_ratio=0.3)).name == "dense"
+    # a multi-device mesh wins over everything
+    mesh = types.SimpleNamespace(size=8)
+    assert choose_backend(_traits(), mesh=mesh).name == "distributed"
+    # ... but a single-device mesh does not force sharding
+    one = types.SimpleNamespace(size=1)
+    assert choose_backend(_traits(density=0.5, dedup_ratio=0.3),
+                          mesh=one).name == "gfp"
+    # shallow mines don't pay FP-tree construction: bounded max_len under
+    # the depth threshold stays level-wise even on GFP-shaped data
+    assert choose_backend(_traits(density=0.5, dedup_ratio=0.3),
+                          max_len=2).name == "dense"
+    assert choose_backend(_traits(density=0.5, dedup_ratio=0.3),
+                          max_len=4).name == "gfp"
+
+
+def test_measured_traits_sane():
+    tx = _tx(0, 4000, 12, 0.5)
+    db = DenseDB.encode(tx)
+    t = DatasetTraits.of_db(db)
+    assert t.n_rows == 4000
+    assert 0 < t.n_unique <= 4000
+    assert t.vocab_size == 12
+    assert 0.3 < t.density < 0.7          # p = 0.5 by construction
+    assert t.skew >= 1.0
+    assert t.dedup_ratio == t.n_unique / t.n_rows
+    assert t.nbytes > 0
+
+    empty = DatasetTraits.measure(np.zeros((0, 1), np.uint32),
+                                  np.zeros((0, 1), np.int32), db.vocab, 0)
+    assert empty.density == 0.0 and empty.skew == 1.0 \
+        and empty.dedup_ratio == 1.0
+
+
+# ------------------------------------------------- construction + invariance
+def test_backend_for_db_constructs_choice_and_results_agree():
+    tx = _tx(1, 5000, 10, 0.5)
+    db = DenseDB.encode(tx)
+    want = mine_frequent(tx, 800)
+
+    be, choice = backend_for_db(db)
+    # 10 items at p=0.5: <= 1024 unique rows over 5000 -> compressible+dense
+    assert choice.name == "gfp"
+    assert isinstance(be, GFPBackend)
+    assert choice.traits is not None and choice.traits.dedup_ratio < 0.5
+
+    forced_dense, cd = backend_for_db(db, name="dense")
+    forced_stream, cs = backend_for_db(db, name="streaming")
+    assert isinstance(forced_dense, DenseBackend)
+    assert isinstance(forced_stream, StreamingBackend)
+    assert cd.name == "dense" and cs.name == "streaming"
+    assert cd.traits is None               # forced picks measure nothing
+
+    assert mine_frequent_backend(be, 800) \
+        == mine_frequent_backend(forced_dense, 800) \
+        == mine_frequent_backend(forced_stream, 800) == want
+
+    with pytest.raises(ValueError):
+        backend_for_db(db, name="bogus")
+
+
+def test_count_server_mine_backend_invariant():
+    tx = _tx(2, 3000, 10, 0.5)
+    theta = 0.2
+    want = mine_frequent(tx, ceil_count(theta * len(tx)))
+
+    srv = CountServer(tx)
+    auto = srv.mine(theta)
+    assert srv.last_backend_choice.name == "gfp"   # dense + compressible
+    assert auto == want
+
+    # identical results whichever backend mines the store
+    assert srv.mine(theta, backend="store") == want
+    assert srv.last_backend_choice.name == "store"
+    assert srv.mine(theta, backend="gfp") == want
+    assert srv.last_backend_choice.name == "gfp"
+    assert srv.mine(theta, backend="dense") == want
+
+    with pytest.raises(ValueError):
+        srv.mine(theta, backend="bogus")
+
+    # a sharded store always mines through its own all-reduced sweep
+    sharded = CountServer(tx, shards=2)
+    assert sharded.mine(theta) == want
+    assert sharded.last_backend_choice.name == "store"
+
+
+def test_store_records_adaptive_residency_choice():
+    tx = _tx(3, 2500, 10, 0.5)
+    store = VersionedDB(tx)
+    assert store.backend_choice is not None
+    assert store.backend_choice.name != "streaming"   # small footprint
+    assert store.resident == "dense"
+    assert store.stats()["backend_choice"] == store.backend_choice.name
+    # explicit residency bypasses the chooser entirely
+    forced = VersionedDB(tx, streaming=True)
+    assert forced.backend_choice is None
+    assert forced.resident == "streaming"
+    assert forced.stats()["backend_choice"] is None
+    # the composed backend exposes measured traits for CountServer.mine
+    t = VersionedCountBackend(store).traits()
+    assert t.n_rows == len(tx) and t.density > 0.3

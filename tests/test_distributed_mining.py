@@ -100,3 +100,134 @@ def test_distributed_single_device_mesh():
     miner = DistributedMiner(mesh)
     got = miner.mine_frequent(bits, np.ones((N, 1), np.int32), vocab, min_count=30)
     assert got == mine_frequent(db, 30)
+
+
+def test_distributed_chunked_mid_level_kill_resume(tmp_path):
+    """chunk_rows threads the N-axis sweep through the driver's chunk hooks:
+    a mesh mine checkpoints MID-level (per host chunk) and a resume skips
+    every counted chunk.  In-process over a (1,1) mesh — the chunk plumbing
+    is mesh-shape independent (the multi-device variant runs under
+    --runslow)."""
+    import jax
+    from repro.core import mine_frequent
+    from repro.mining import ItemVocab, encode_bitmap
+    from repro.mining.distributed import DistributedMiner, MiningCheckpoint
+
+    rng = np.random.default_rng(11)
+    M, N = 12, 600
+    db = [[i for i in range(M) if rng.random() < 0.5] for _ in range(N)]
+    want = mine_frequent(db, 50)
+    assert max(len(k) for k in want) >= 3      # levels after the kill
+    vocab = ItemVocab.from_transactions(db)
+    bits = encode_bitmap(db, vocab)
+    w = np.ones((N, 1), np.int32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    ckpt = MiningCheckpoint(str(tmp_path / "chunked.json"))
+    miner = DistributedMiner(mesh, checkpoint=ckpt, chunk_rows=150)
+    backend = miner.backend(bits, w, vocab)
+    assert backend.n_count_chunks == 4         # 600 rows / 150
+    assert backend.chunk_signature()["chunk_rows"] == 150
+
+    class _Preempted(Exception):
+        pass
+
+    def die_mid_level_2(level, chunk):
+        if level == 2 and chunk == 1:
+            raise _Preempted()                 # 2 of 4 chunks counted
+
+    with pytest.raises(_Preempted):
+        miner.mine_frequent(bits, w, vocab, 50, on_chunk=die_mid_level_2)
+    state = json.load(open(str(tmp_path / "chunked.json")))
+    assert state["partial"]["level"] == 2
+    assert state["partial"]["next_chunk"] == 2
+    assert state["partial"]["backend"] == "distributed"
+    assert state["partial"]["chunk_rows"] == 150
+
+    resumed = []
+    got = miner.mine_frequent(bits, w, vocab, 50,
+                              on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == want
+    assert resumed[0] == (2, 2)                # resumed mid-level, chunk 2
+
+    # a changed chunk geometry restarts the in-flight level from chunk 0
+    # (signature mismatch), still exact
+    ckpt2 = MiningCheckpoint(str(tmp_path / "regeo.json"))
+    with pytest.raises(_Preempted):
+        DistributedMiner(mesh, checkpoint=ckpt2, chunk_rows=150).mine_frequent(
+            bits, w, vocab, 50, on_chunk=die_mid_level_2)
+    other = DistributedMiner(mesh, checkpoint=ckpt2, chunk_rows=200)
+    regeo = []
+    got2 = other.mine_frequent(bits, w, vocab, 50,
+                               on_chunk=lambda l, c: regeo.append((l, c)))
+    assert got2 == want
+    assert regeo[0] == (2, 0)
+
+
+CHUNKED_KILL_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+
+from repro.core import mine_frequent
+from repro.mining import ItemVocab, encode_bitmap
+from repro.mining.distributed import DistributedMiner, MiningCheckpoint
+
+assert len(jax.devices()) == 8, jax.devices()
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+rng = np.random.default_rng(13)
+M, N = 14, 600
+db = [[i for i in range(M) if rng.random() < 0.5] for _ in range(N)]
+vocab = ItemVocab.from_transactions(db)
+bits = encode_bitmap(db, vocab)
+w = np.ones((N, 1), np.int32)
+
+ck = MiningCheckpoint(os.environ["CKPT_PATH"])
+miner = DistributedMiner(mesh, checkpoint=ck, chunk_rows=150)
+
+if os.environ["PHASE"] == "kill":
+    def die(level, chunk):
+        if level == 2 and chunk == 1:
+            os._exit(17)    # hard kill mid-level: no cleanup, no atexit
+    miner.mine_frequent(bits, w, vocab, 60, on_chunk=die)
+    raise SystemExit("kill hook never fired")
+
+resumed = []
+got = miner.mine_frequent(bits, w, vocab, 60,
+                          on_chunk=lambda l, c: resumed.append((l, c)))
+want = mine_frequent(db, 60)
+assert got == want, (len(got), len(want))
+assert tuple(resumed[0]) == (2, 2), resumed[:3]
+print(json.dumps({"ok": True, "first_resumed": list(resumed[0]),
+                  "n_frequent": len(got)}))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_chunked_kill_resume_subprocess(tmp_path):
+    """Two-process kill/resume on a real 8-device mesh: the first process is
+    hard-killed (os._exit) mid-level-2 of a chunked sweep; the second resumes
+    from the durable checkpoint at the exact next chunk."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["CKPT_PATH"] = str(tmp_path / "chunked.ckpt.json")
+    env.pop("XLA_FLAGS", None)
+
+    env["PHASE"] = "kill"
+    proc = subprocess.run([sys.executable, "-c", CHUNKED_KILL_SCRIPT],
+                          capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 17, (proc.returncode, proc.stderr[-4000:])
+    state = json.load(open(env["CKPT_PATH"]))
+    assert state["partial"]["level"] == 2
+    assert state["partial"]["next_chunk"] == 2
+
+    env["PHASE"] = "resume"
+    proc = subprocess.run([sys.executable, "-c", CHUNKED_KILL_SCRIPT],
+                          capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["first_resumed"] == [2, 2]
+    assert out["n_frequent"] > 0

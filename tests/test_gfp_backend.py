@@ -1,0 +1,269 @@
+"""Differential oracle battery for the device-hybrid GFP-growth backend.
+
+Three independent implementations of the same counting contract are pinned
+bit-exactly against each other on randomized DBs and multitudes:
+
+  * the paper-faithful HOST GFP-growth (``core/gfp.py`` walking a real
+    FP-tree + TIS-tree, per class),
+  * the device-hybrid ``GFPBackend`` (conditional-pattern-base counting over
+    the encoded bitmap, host/kernel per block size) — in its default, its
+    device-only (``host_rows=0``), and its unguided (``guide=False``)
+    configurations,
+  * the dense level-wise kernel path (``dense_gfp_counts`` /
+    ``DenseBackend``).
+
+Plus the edge contracts (class columns, empty multitude/DB, unknown-item
+targets, at-threshold epsilon) and the backend's driver integration:
+mid-flush kill/resume with no conditional block recounted, and whole-state
+checkpoint discard on a stale store version.
+"""
+import json
+
+import numpy as np
+import pytest
+from _pbt import given, settings, strategies as st
+
+from repro.core import mine_frequent
+from repro.core.fptree import FPTree, ItemOrder
+from repro.core.gfp import gfp_growth
+from repro.core.incremental import ceil_count
+from repro.core.tis import TISTree
+from repro.mining import (DenseBackend, DenseDB, GFPBackend,
+                          dense_gfp_counts, gfp_mine_frequent,
+                          gfp_multitude_counts, mine_frequent_backend)
+from repro.mining.distributed import MiningCheckpoint
+from repro.mining.encode import encode_targets
+from repro.serve import VersionedDB
+
+
+class _Preempted(Exception):
+    pass
+
+
+def _random_tx(rng, n, m, p):
+    return [[i for i in range(m) if rng.random() < p] for _ in range(n)]
+
+
+def _random_multitude(rng, m, n_targets, max_len):
+    """Random target itemsets over items 0..m+1 — items m and m+1 do NOT
+    exist in any transaction, exercising the unknown-item contract."""
+    out = []
+    for _ in range(n_targets):
+        size = int(rng.integers(1, max_len + 1))
+        out.append(sorted(rng.choice(m + 2, size=min(size, m + 2),
+                                     replace=False).tolist()))
+    return out
+
+
+def _host_gfp(tx, classes, n_classes, vocab, targets):
+    """The paper-faithful oracle: per class, a real FP-tree under the
+    bitmap's arrangement order + a guided walk; unknown-item targets stay at
+    their initial g_count of 0 (they never appear in any FP-tree)."""
+    known = list(vocab.items)
+    unknown = sorted({a for t in targets for a in t if a not in vocab},
+                     key=repr)
+    order = ItemOrder(known + unknown)   # extended: targets always insert
+    out = {}
+    for c in range(n_classes):
+        tx_c = [t for t, y in zip(tx, classes) if y == c]
+        fp = FPTree.build(tx_c, order)
+        tis = TISTree(order)
+        for t in targets:
+            tis.insert(t)
+        tis.finalize()
+        gfp_growth(tis, fp)
+        for key, g in tis.as_dict("g_count").items():
+            out.setdefault(key, np.zeros(n_classes, np.int32))[c] = g
+    return out
+
+
+def _tis_of(targets, vocab):
+    unknown = sorted({a for t in targets for a in t if a not in vocab},
+                     key=repr)
+    tis = TISTree(ItemOrder(list(vocab.items) + unknown))
+    for t in targets:
+        tis.insert(t)
+    tis.finalize()
+    return tis
+
+
+# ------------------------------------------------ the differential battery
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pbt_gfp_differential_battery(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 120))
+    m = int(rng.integers(2, 13))
+    p = float(rng.uniform(0.1, 0.7))
+    n_classes = int(rng.integers(1, 4))
+    tx = _random_tx(rng, n, m, p)
+    classes = [int(rng.integers(0, n_classes)) for _ in tx]
+    targets = _random_multitude(rng, m, n_targets=int(rng.integers(1, 25)),
+                                max_len=4)
+
+    db = DenseDB.encode(tx, classes=classes, n_classes=n_classes)
+    tis = _tis_of(targets, db.vocab)
+    oracle = _host_gfp(tx, classes, n_classes, db.vocab, targets)
+
+    via_dense = dense_gfp_counts(tis, db)
+    via_gfp = gfp_multitude_counts(tis, db)
+    via_device = gfp_multitude_counts(tis, db, host_rows=0)   # kernel-only
+    via_unguided = gfp_multitude_counts(tis, db, guide=False)
+
+    assert set(oracle) == set(via_dense) == set(via_gfp) \
+        == set(via_device) == set(via_unguided)
+    for key in oracle:
+        assert np.array_equal(via_gfp[key], oracle[key]), key
+        assert np.array_equal(via_gfp[key], via_dense[key]), key
+        assert np.array_equal(via_gfp[key], via_device[key]), key
+        assert np.array_equal(via_gfp[key], via_unguided[key]), key
+
+
+def test_gfp_counts_match_dense_backend_blockwise():
+    rng = np.random.default_rng(42)
+    tx = _random_tx(rng, 350, 11, 0.45)
+    db = DenseDB.encode(tx)
+    targets = _random_multitude(rng, 11, n_targets=60, max_len=5)
+    known = [t for t in targets if all(a in db.vocab for a in t)]
+    masks = encode_targets(known, db.vocab)
+
+    dense = np.asarray(DenseBackend(db).counts(masks))
+    for kw in ({}, {"host_rows": 0}, {"guide": False}):
+        b = GFPBackend(db, **kw)
+        assert np.array_equal(b.counts(masks), dense), kw
+    # the hybrid default on this small DB never launches: all blocks host-
+    # sized, every count still bit-identical to the kernel sweep
+    b = GFPBackend(db)
+    b.counts(masks)
+    assert b.kernel_launches == 0 and b.host_blocks > 0
+
+
+# ---------------------------------------------------------- edge contracts
+def test_empty_multitude_and_empty_db():
+    rng = np.random.default_rng(3)
+    tx = _random_tx(rng, 60, 8, 0.4)
+    db = DenseDB.encode(tx)
+
+    tis = _tis_of([[0]], db.vocab)
+    # a TIS-tree whose only node is a non-target prefix => no targets
+    empty = TISTree(ItemOrder(list(db.vocab.items)))
+    empty.insert([0, 1], target=False)
+    empty.finalize()
+    assert gfp_multitude_counts(empty, db) == {}
+
+    # empty DB: every target counts 0, mining yields nothing
+    edb = DenseDB.encode([], vocab=db.vocab)
+    got = gfp_multitude_counts(tis, edb)
+    assert all(np.array_equal(v, np.zeros(1, np.int32))
+               for v in got.values())
+    assert gfp_mine_frequent(edb, 1) == {}
+
+    # empty target block through the raw protocol
+    b = GFPBackend(db)
+    out = b.counts(np.zeros((0, db.vocab.n_words), np.uint32))
+    assert out.shape == (0, 1)
+
+
+def test_unknown_item_targets_count_zero():
+    rng = np.random.default_rng(4)
+    tx = _random_tx(rng, 80, 6, 0.5)
+    db = DenseDB.encode(tx)
+    targets = [[0, 99], [99], [1, 2]]          # 99 never occurs
+    tis = _tis_of(targets, db.vocab)
+    got = gfp_multitude_counts(tis, db)
+    assert np.array_equal(got[(0, 99)], np.zeros(1, np.int32))
+    assert np.array_equal(got[(99,)], np.zeros(1, np.int32))
+    want = dense_gfp_counts(tis, db)
+    for k in got:
+        assert np.array_equal(got[k], want[k]), k
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pbt_gfp_mine_parity_with_epsilon_threshold(seed):
+    rng = np.random.default_rng(seed)
+    tx = _random_tx(rng, int(rng.integers(40, 200)), int(rng.integers(4, 10)),
+                    float(rng.uniform(0.25, 0.6)))
+    db = DenseDB.encode(tx)
+    counts = sorted(mine_frequent(tx, 1).values())
+    mc = counts[len(counts) // 2]              # an exactly-achieved count
+    want = mine_frequent(tx, mc)
+
+    assert gfp_mine_frequent(db, mc) == want
+    # at-threshold epsilon: theta * n landing EXACTLY on mc must include the
+    # count-mc itemsets (the repo-wide ceil_count(x - 1e-9) rule)
+    theta = mc / len(tx)
+    assert ceil_count(theta * len(tx)) == mc
+    assert gfp_mine_frequent(db, ceil_count(theta * len(tx))) == want
+    assert gfp_mine_frequent(db, mc, host_rows=0) == want
+
+
+def test_gfp_class_column_parity():
+    rng = np.random.default_rng(5)
+    tx = _random_tx(rng, 260, 10, 0.4)
+    y = [int(rng.random() < 0.3) for _ in tx]
+    rare = [t for t, c in zip(tx, y) if c == 1]
+    want = mine_frequent(rare, 12)
+    db = DenseDB.encode(tx, classes=y, n_classes=2)
+    assert gfp_mine_frequent(db, 12, class_column=1) == want
+
+
+# ------------------------------------------------- driver kill/resume seam
+def test_gfp_mid_flush_kill_resume(tmp_path):
+    tx = _random_tx(np.random.default_rng(6), 400, 9, 0.5)
+    want = mine_frequent(tx, 60)
+    assert max(len(k) for k in want) >= 3      # levels after the kill
+    db = DenseDB.encode(tx)
+
+    fresh = GFPBackend(db)
+    assert mine_frequent_backend(fresh, 60) == want
+    assert fresh.kernel_launches == 0          # all blocks host-sized here
+    assert fresh.blocks_counted > 2
+
+    ckpt = MiningCheckpoint(str(tmp_path / "gfp.json"))
+    killed = GFPBackend(db)
+
+    def die_mid_flush(level, chunk):
+        if level == 2 and chunk == 1:
+            raise _Preempted()                 # two tail groups counted
+
+    with pytest.raises(_Preempted):
+        mine_frequent_backend(killed, 60, checkpoint=ckpt,
+                              on_chunk=die_mid_flush)
+    assert killed.blocks_counted == 2
+    state = json.load(open(str(tmp_path / "gfp.json")))
+    assert state["partial"]["level"] == 2
+    assert state["partial"]["next_chunk"] == 2
+    assert state["partial"]["backend"] == "gfp"
+
+    resumed = []
+    b2 = GFPBackend(db)
+    got = mine_frequent_backend(b2, 60, checkpoint=ckpt,
+                                on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == want
+    assert resumed[0] == (2, 2)                # resumed MID-flush
+    # no conditional block recounted: the resumed run counted exactly the
+    # blocks the killed run didn't
+    assert b2.blocks_counted == fresh.blocks_counted - killed.blocks_counted
+
+
+def test_gfp_from_store_stale_signature_discard(tmp_path):
+    rng = np.random.default_rng(7)
+    tx = _random_tx(rng, 200, 10, 0.35)
+    store = VersionedDB(tx, merge_ratio=2.0)   # keep the delta resident
+    ckpt = MiningCheckpoint(str(tmp_path / "stale.json"))
+
+    b = GFPBackend.from_store(store)
+    assert b.mine_signature() == {"engine": "gfp", "version": store.version}
+    old = mine_frequent_backend(b, 30, checkpoint=ckpt)
+    assert old == mine_frequent(tx, 30)
+
+    extra = _random_tx(rng, 120, 10, 0.6)      # denser rows: counts shift
+    store.append(extra)
+    b2 = GFPBackend.from_store(store)
+    assert b2.mine_signature() != b.mine_signature()
+    assert b2.n_rows == len(tx) + len(extra)   # composed base+delta rows
+    got = mine_frequent_backend(b2, 30, checkpoint=ckpt)
+    want = mine_frequent(tx + extra, 30)
+    assert got == want                         # stale version state NOT used
+    assert got != old

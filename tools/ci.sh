@@ -32,6 +32,10 @@ echo "=== mine-loop smoke (cross-backend parity + driver bench sanity) ==="
 python -m pytest -q tests/test_mining_driver.py
 python -m benchmarks.mine_loop --smoke
 
+echo "=== gfp smoke (differential battery + chooser pins + launch gate) ==="
+python -m pytest -q tests/test_gfp_backend.py tests/test_chooser.py
+python -m benchmarks.gfp_hybrid --smoke
+
 echo "=== streaming perf record ==="
 python -m benchmarks.streaming --json BENCH_streaming.json
 
@@ -46,3 +50,6 @@ python -m benchmarks.shard_serve --json BENCH_shard.json
 
 echo "=== rule-serve perf record ==="
 python -m benchmarks.rule_serve --json BENCH_rules.json
+
+echo "=== gfp perf record (launch-reduction gate enforced in-run) ==="
+python -m benchmarks.gfp_hybrid --json BENCH_gfp.json
