@@ -1,0 +1,126 @@
+"""Telemetry overhead benchmark: the serve hot path with metrics off vs on.
+
+Serves a warm-cache query pool through ``CountServer`` — every query is a
+host-side cache hit, so the workload is pure instrumented-seam traffic
+(batcher submit, dedup, cache lookup, reply scatter) with no kernel time to
+hide behind.  Measures interleaved off/on rounds and gates the median
+overhead of enabled metrics at <5%: the registry's whole design (bound
+instruments, thread-confined shards, an ``enabled`` check before any
+allocation) exists to keep always-on telemetry invisible, and this bench is
+the enforcement.  Run as a script it emits ``BENCH_obs.json``.
+
+  PYTHONPATH=src python -m benchmarks.obs_overhead [--json BENCH_obs.json]
+      [--smoke]
+"""
+from __future__ import annotations
+
+import statistics
+from typing import List
+
+import numpy as np
+
+from repro import obs
+from repro.serve import CountServer
+
+from .common import Row, timeit
+
+ROWS, ITEMS, POOL = 4096, 48, 256
+BATCH = 64
+ROUNDS = 5               # interleaved off/on measurement rounds
+GATE_PCT = 5.0           # enabled metrics may cost at most this much
+
+
+def _workload(pool_size: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    tx = [tuple(sorted(rng.choice(ITEMS, size=rng.integers(1, 6),
+                                  replace=False).tolist()))
+          for _ in range(ROWS)]
+    pool = [tuple(rng.choice(ITEMS, size=rng.integers(1, 4),
+                             replace=False).tolist())
+            for _ in range(pool_size)]
+    return tx, pool
+
+
+def _serve_pool(server: CountServer, pool, batch: int) -> None:
+    for s in range(0, len(pool), batch):
+        for i, key in enumerate(pool[s:s + batch]):
+            server.submit(f"c{i % 8}", [key])
+        server.flush()
+
+
+def run(record: List[dict] | None = None, *, smoke: bool = False) -> List[Row]:
+    pool_size = 64 if smoke else POOL
+    rounds = 2 if smoke else ROUNDS
+    tx, pool = _workload(pool_size)
+    server = CountServer(tx, cache=True)
+    _serve_pool(server, pool, BATCH)          # prime: every later rep is warm
+
+    # Interleaved A/B rounds so drift (thermal, sibling CI load) hits both
+    # configurations equally; the gate compares medians across rounds.
+    off_us, on_us = [], []
+    try:
+        for _ in range(rounds):
+            obs.disable_all()
+            off_us.append(timeit(lambda: _serve_pool(server, pool, BATCH),
+                                 repeats=1, warmup=1) / pool_size)
+            obs.configure(metrics=True)
+            on_us.append(timeit(lambda: _serve_pool(server, pool, BATCH),
+                                repeats=1, warmup=1) / pool_size)
+    finally:
+        obs.reset()                           # restore session defaults
+
+    off = statistics.median(off_us)
+    on = statistics.median(on_us)
+    overhead_pct = (on - off) / off * 100.0
+
+    tag = f"obs[N={ROWS},pool={pool_size}]"
+    rows: List[Row] = [
+        (f"{tag}/metrics_off", off, "warm-cache serve, obs.disable_all()"),
+        (f"{tag}/metrics_on", on, f"overhead={overhead_pct:+.1f}%"),
+    ]
+    if record is not None:
+        record.append({"variant": "overhead", "batch": BATCH,
+                       "us_off": off, "us_on": on,
+                       "overhead_pct": overhead_pct,
+                       "gate_pct": GATE_PCT, "rounds": rounds})
+
+    if not smoke:
+        assert overhead_pct < GATE_PCT, (
+            f"enabled metrics cost {overhead_pct:.1f}% on the warm serve "
+            f"path (gate {GATE_PCT}%): off={off:.1f}us on={on:.1f}us/query")
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_obs.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny pool, no gate — CI liveness check only")
+    args = ap.parse_args()
+
+    record: List[dict] = []
+    rows = run(record, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if not args.smoke:
+        payload = {
+            "bench": "obs_overhead",
+            "backend": jax.default_backend(),
+            "problem": {"rows": ROWS, "items": ITEMS, "pool": POOL,
+                        "batch": BATCH, "rounds": ROUNDS},
+            "rows": record,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json} ({len(record)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ mine    — unified level-wise mining driver vs the legacy per-engine loops
 shard   — sharded-store throughput (1/2/4/8 shards) + async flush latency
 rules   — minority-rule serving cold/warm throughput + 1/2/4-shard parity
 gfp     — GFP-hybrid vs level-wise launches-per-mine on dense long patterns
+obs     — telemetry overhead on the warm serve path (metrics off vs on)
 """
 import argparse
 import sys
@@ -22,7 +23,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig5", "fig6", "kernel", "scaling", "stream",
-                             "serve", "mine", "shard", "rules", "gfp"])
+                             "serve", "mine", "shard", "rules", "gfp",
+                             "obs"])
     args = ap.parse_args()
 
     from .common import emit
@@ -58,6 +60,9 @@ def main() -> None:
     if args.only in (None, "gfp"):
         from . import gfp_hybrid
         suites["gfp"] = gfp_hybrid.run
+    if args.only in (None, "obs"):
+        from . import obs_overhead
+        suites["obs"] = obs_overhead.run
 
     print("name,us_per_call,derived")
     ok = True

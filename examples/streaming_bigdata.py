@@ -27,6 +27,7 @@ import os
 import tempfile
 import time
 
+from repro import obs
 from repro.core import minority_report
 from repro.data import bernoulli_db
 from repro.mining import (DenseDB, StreamingBackend, StreamingDB,
@@ -101,6 +102,7 @@ def main() -> None:
         print(f"driver mine complete: {len(got)} frequent itemsets after "
               f"{len(chunks)} chunk-counts this run (== uninterrupted run); "
               f"delete {args.ckpt} to start fresh")
+        print(obs.summary_line())
         return
 
     # simulated mode: preempt mid-level in-process, then resume
@@ -142,6 +144,7 @@ def main() -> None:
               f"{len(seen) + len(resumed)}+; {len(got)} frequent itemsets, "
               f"identical to uninterrupted run")
     os.unlink(ckpt_path)
+    print(obs.summary_line())
 
 
 if __name__ == "__main__":

@@ -7,12 +7,15 @@ Mosaic on TPU), and a pure-jnp fallback for degenerate shapes.
 from __future__ import annotations
 
 import functools
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
+from ...roofline.kernel_model import record_launch
 from .kernel import itemset_counts_pallas
 from .ref import itemset_counts_ref, itemset_counts_ref_blocked
 
@@ -72,10 +75,31 @@ def itemset_counts(
     wt_p = jnp.pad(weights, ((0, n_pad), (0, 0)))
     tgt_p = jnp.pad(tgt_bits, ((0, k_pad), (0, 0)))       # pad targets: sliced
 
-    out_t = itemset_counts_pallas(
-        tx_p.T, tgt_p, wt_p.T.astype(jnp.int32),
-        block_k=block_k, block_n=block_n, interpret=interpret, accum=accum,
-    )                                                     # (C, K_pad)
+    # Per-launch telemetry: wall time vs the roofline model's prediction for
+    # this geometry (repro.obs / roofline.kernel_model).  Only measurable at
+    # the eager boundary — under a jit trace (e.g. the streaming
+    # itemset_counts_into step) the operands are Tracers and host timing
+    # would clock trace time, not the launch, so recording is skipped there.
+    eager = (not isinstance(tx_bits, jax.core.Tracer)
+             and not isinstance(tgt_bits, jax.core.Tracer))
+    timed = obs.kernel_timing_enabled() and eager
+    span = (obs.TRACER.span("kernel.count",
+                            {"n": n, "k": k, "w": w, "c": c})
+            if eager else obs.tracing.NOOP_SPAN)
+    with span:
+        t0 = time.perf_counter() if timed else 0.0
+        out_t = itemset_counts_pallas(
+            tx_p.T, tgt_p, wt_p.T.astype(jnp.int32),
+            block_k=block_k, block_n=block_n, interpret=interpret,
+            accum=accum,
+        )                                                 # (C, K_pad)
+        if timed:
+            # blocking gives a TRUE wall time; free on CPU (callers
+            # materialize the counts immediately) but serializes a pipelined
+            # TPU launch stream — obs.configure(kernel_timing=False) when
+            # overlap matters
+            out_t.block_until_ready()
+            record_launch(n, k, w, c, time.perf_counter() - t0)
     return out_t.T[:k, :]
 
 

@@ -68,8 +68,11 @@ def main() -> None:
             print(f"resuming from checkpoint {args.ckpt}: {where}, "
                   f"{len(state['frequent'])} itemsets banked")
 
+    from .. import obs
+
     if args.backend != "mra":
         _mine_backend(tx, args, ckpt)
+        print(obs.summary_line())
         return
     t0 = time.time()
     res = minority_report_dense(
@@ -94,6 +97,7 @@ def main() -> None:
         assert a == b, "dense/host rule mismatch!"
         print(f"verified against paper-faithful engine ({t_host:.2f}s): "
               f"{len(b)} rules identical")
+    print(obs.summary_line())
 
 
 def _mine_backend(tx, args, ckpt) -> None:

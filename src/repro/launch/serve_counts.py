@@ -67,14 +67,34 @@ def main() -> None:
                     help="serve minority rules over the count path")
     ap.add_argument("--min-conf", type=float, default=0.3)
     ap.add_argument("--target-class", type=int, default=1)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus text) and /metrics.json "
+                         "on this port for the run's duration (0=ephemeral)")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write the final registry snapshot as JSON")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable span tracing; write a Chrome trace_event "
+                         "JSON dump (chrome://tracing / Perfetto) and print "
+                         "the per-span summary on exit")
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import numpy as np
 
+    from .. import obs
     from ..data import bernoulli_db
     from ..serve import CountServer
+
+    if args.trace:
+        obs.configure(tracing=True)
+    metrics_srv = None
+    if args.metrics_port is not None:
+        from ..obs.export import start_metrics_server
+
+        metrics_srv = start_metrics_server(args.metrics_port)
+        print(f"metrics: http://127.0.0.1:"
+              f"{metrics_srv.server_address[1]}/metrics")
 
     mesh = None
     if args.mesh_data is not None:
@@ -260,6 +280,25 @@ def main() -> None:
                 print(f"verified {len(res.rules)} rules "
                       f"({len(top)} optimal) == host minority_report "
                       f"oracle at v{server.store.version}")
+
+    snap = obs.snapshot()
+    if args.metrics_dump:
+        from ..obs.export import dump_json
+
+        dump_json(args.metrics_dump, snap,
+                  extra={"kernel_efficiency": obs.kernel_efficiency(snap)})
+        print(f"metrics snapshot -> {args.metrics_dump}")
+    if args.trace:
+        import json
+
+        with open(args.trace, "w") as f:
+            json.dump(obs.TRACER.chrome_trace(), f)
+        print(f"chrome trace ({len(obs.TRACER.spans())} spans) -> "
+              f"{args.trace}")
+        print(obs.TRACER.summary())
+    if metrics_srv is not None:
+        metrics_srv.shutdown()
+    print(obs.summary_line(snap))
 
 
 if __name__ == "__main__":

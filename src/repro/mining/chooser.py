@@ -42,6 +42,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..obs import REGISTRY
 from .stream import DEFAULT_STREAM_THRESHOLD_BYTES
 
 # Decision thresholds (first-match order documented above).
@@ -115,6 +116,16 @@ class BackendChoice:
     traits: Optional[DatasetTraits] = field(default=None)
 
 
+def _record_choice(choice: BackendChoice) -> BackendChoice:
+    """Publish one chooser verdict: a per-engine decision counter plus a
+    one-hot ``chooser_last_decision`` gauge (``exclusive=True`` clears the
+    previous engine's label, so exactly one label set reads 1)."""
+    REGISTRY.counter("chooser_decisions_total", backend=choice.name).inc()
+    REGISTRY.set_gauge("chooser_last_decision", 1, exclusive=True,
+                       backend=choice.name)
+    return choice
+
+
 def choose_backend(
     traits: DatasetTraits,
     *,
@@ -128,7 +139,27 @@ def choose_backend(
     min_depth: int = DEFAULT_MIN_DEPTH,
 ) -> BackendChoice:
     """Map measured traits to an engine name (decision order in the module
-    docstring; first match wins)."""
+    docstring; first match wins).  Every verdict — whichever of the return
+    points produced it — is recorded through :func:`_record_choice`."""
+    return _record_choice(_choose_backend(
+        traits, mesh=mesh, max_len=max_len,
+        stream_threshold_bytes=stream_threshold_bytes, tiny_rows=tiny_rows,
+        dense_density=dense_density, dedup_ratio=dedup_ratio, skew=skew,
+        min_depth=min_depth))
+
+
+def _choose_backend(
+    traits: DatasetTraits,
+    *,
+    mesh=None,
+    max_len: int = 0,
+    stream_threshold_bytes: int = DEFAULT_STREAM_THRESHOLD_BYTES,
+    tiny_rows: int = DEFAULT_TINY_ROWS,
+    dense_density: float = DEFAULT_DENSE_DENSITY,
+    dedup_ratio: float = DEFAULT_DEDUP_RATIO,
+    skew: float = DEFAULT_SKEW,
+    min_depth: int = DEFAULT_MIN_DEPTH,
+) -> BackendChoice:
     if mesh is not None and getattr(mesh, "size", 1) > 1:
         return BackendChoice(
             "distributed",

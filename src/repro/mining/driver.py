@@ -29,12 +29,18 @@ from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import REGISTRY, TRACER
 from .backend import CountBackend
 from .encode import encode_targets
 from .plan import canonical_itemsets
 
 Item = Hashable
 Key = Tuple[Item, ...]
+
+_M_LEVELS = REGISTRY.counter("mine_levels_total")
+_M_CANDIDATES = REGISTRY.counter("mine_candidates_total")
+_M_FREQUENT = REGISTRY.counter("mine_frequent_total")
+_M_CHUNKS = REGISTRY.counter("mine_chunks_total")
 
 
 def mine_frequent(
@@ -113,8 +119,15 @@ def mine_frequent(
 
         hook = _ckpt if (checkpoint is not None or on_chunk is not None) \
             else None
-        return np.asarray(backend.counts(masks, start_chunk=start, init=init,
-                                         on_chunk=hook))
+        # chunk accounting without forcing the hook on (the hot path skips
+        # the per-chunk callback entirely): the sweep covers exactly the
+        # chunks from the resume point to the end of the grid
+        _M_CHUNKS.inc(backend.n_count_chunks - start)
+        with TRACER.span("mine.level",
+                         {"level": lvl, "n_candidates": len(itemsets),
+                          "start_chunk": start}):
+            return np.asarray(backend.counts(masks, start_chunk=start,
+                                             init=init, on_chunk=hook))
 
     def _absorb(itemsets: List[Key], rows: np.ndarray) -> set:
         frequent = set()
@@ -138,6 +151,9 @@ def mine_frequent(
                 else _count_level(singles, 1)
             frequent = _absorb(singles, rows)
         level = 1
+        _M_LEVELS.inc()
+        _M_CANDIDATES.inc(len(singles))
+        _M_FREQUENT.inc(len(frequent))
         if checkpoint is not None:
             checkpoint.save(level, out, meta=msig)
         if on_level is not None:
@@ -154,6 +170,9 @@ def mine_frequent(
         rows = _count_level(itemsets, level + 1)
         frequent = _absorb(itemsets, rows)
         level += 1
+        _M_LEVELS.inc()
+        _M_CANDIDATES.inc(len(itemsets))
+        _M_FREQUENT.inc(len(frequent))
         if checkpoint is not None:
             checkpoint.save(level, out, meta=msig)
         if on_level is not None:

@@ -49,10 +49,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.itemset_count import itemset_counts
+from ..obs import REGISTRY, TRACER
 from .backend import CountBackend
 from .encode import ItemVocab, dedup_rows, encode_targets, pad_words
 
 Item = Hashable
+
+# hybrid dispatch ledger: which path counted each flushed conditional block
+# (obs.summary_line reads the host label), and CPB cache effectiveness
+_M_BLOCKS_HOST = REGISTRY.counter("gfp_blocks_total", path="host")
+_M_BLOCKS_KERNEL = REGISTRY.counter("gfp_blocks_total", path="kernel")
+_M_BLOCKS_EMPTY = REGISTRY.counter("gfp_blocks_total", path="empty")
+_M_CPB_BUILDS = REGISTRY.counter("gfp_cpb_builds_total")
+_M_CPB_REUSES = REGISTRY.counter("gfp_cpb_reuses_total")
 
 # Conditional blocks at or under this many deduped rows are counted on the
 # host (vectorized containment); larger blocks go through the kernel.  The
@@ -204,12 +213,15 @@ class GFPBackend(CountBackend):
         if k == 0:
             return acc
         groups = self._flush_groups(masks)
-        for j in range(start_chunk, len(groups)):
-            tail, idx = groups[j]
-            acc[idx] += self._count_group(tail, masks[idx])
-            self.blocks_counted += 1
-            if on_chunk is not None:
-                on_chunk(j, acc)
+        with TRACER.span("gfp.counts",
+                         {"n_masks": k, "n_groups": len(groups),
+                          "start_chunk": start_chunk}):
+            for j in range(start_chunk, len(groups)):
+                tail, idx = groups[j]
+                acc[idx] += self._count_group(tail, masks[idx])
+                self.blocks_counted += 1
+                if on_chunk is not None:
+                    on_chunk(j, acc)
         return acc
 
     # -- the guided flush -----------------------------------------------------
@@ -226,6 +238,7 @@ class GFPBackend(CountBackend):
         every mining level with this tail reuses the same block."""
         blk = self._cpb.get(col)
         if blk is None:
+            _M_CPB_BUILDS.inc()
             bit = (self.bits[:, col >> 5] >> np.uint32(col & 31)) & np.uint32(1)
             sel = bit.astype(bool)
             rows = self.bits[sel] & _prefix_mask(col, self.bits.shape[1])
@@ -234,12 +247,15 @@ class GFPBackend(CountBackend):
                 rows, wts = dedup_rows(rows, wts)
             blk = (rows, wts)
             self._cpb[col] = blk
+        else:
+            _M_CPB_REUSES.inc()
         return blk
 
     def _count_group(self, tail: int, gmasks: np.ndarray) -> np.ndarray:
         kg = gmasks.shape[0]
         if tail < 0:
             # the empty itemset is contained in every row
+            _M_BLOCKS_EMPTY.inc()
             return np.broadcast_to(self._class_totals,
                                    (kg, self.n_classes))
         rows, wts = self._conditional_block(tail)
@@ -251,11 +267,14 @@ class GFPBackend(CountBackend):
             rows, wts = dedup_rows(rows & union, wts)
         p = rows.shape[0]
         if p == 0:
+            _M_BLOCKS_EMPTY.inc()
             return np.zeros((kg, self.n_classes), np.int32)
         if p <= self.host_rows:
             self.host_blocks += 1
+            _M_BLOCKS_HOST.inc()
             return self._host_count(rows, wts, gmasks)
         self.kernel_launches += 1
+        _M_BLOCKS_KERNEL.inc()
         return np.asarray(itemset_counts(
             jnp.asarray(rows), jnp.asarray(gmasks), jnp.asarray(wts),
             use_kernel=self.use_kernel))

@@ -1,0 +1,157 @@
+"""Unified telemetry layer: one process-wide metrics registry + span tracer.
+
+Every seam of the serve/mine/kernel stack records here — the batcher, the
+async flusher, both caches, the versioned/sharded stores, the mining
+driver's level/chunk loop, the GFP hybrid's launch/host-block/CPB counters,
+the chooser's decisions, and per-launch kernel wall time against the
+roofline model's prediction.  Exports: ``snapshot()`` (JSON-safe),
+``prometheus_text`` / ``start_metrics_server`` (``obs.export``), Chrome
+trace dumps (``obs.tracing``), and the ``summary_line()`` one-liner every
+entry point prints on exit.
+
+State model:
+
+  * ``REGISTRY`` (metrics) is ENABLED by default: counters/histograms are
+    thread-confined dict bumps, cheap enough for the hot path (the
+    ``benchmarks/obs_overhead.py`` gate holds the serve suite under 5%).
+  * ``TRACER`` (spans) is DISABLED by default: ring-buffer traces are an
+    opt-in debugging surface (``--trace`` in the launchers).
+  * ``KERNEL_TIMING`` gates the per-launch wall-time measurement in
+    ``kernels/itemset_count/ops.py``: it blocks on the launch result to get
+    a true wall time, which is free on CPU (callers materialize the counts
+    immediately) but would serialize a pipelined TPU launch stream — turn it
+    off on real accelerators when overlap matters more than the
+    measured-vs-predicted ratio.
+  * ``configure(metrics=..., tracing=..., kernel_timing=...)`` flips any
+    subset; ``disable_all()`` is the zero-overhead escape hatch (pinned by
+    the no-allocation test in ``tests/test_obs.py``).
+
+Import discipline: this package imports only the stdlib — serve/, mining/,
+kernels/, and roofline/ all import it, never the reverse.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .metrics import (MetricsRegistry, counter_total, counter_value,
+                      hist_get, hist_merge, hist_quantile, nearest_rank)
+from .tracing import Tracer
+
+__all__ = [
+    "REGISTRY", "TRACER", "configure", "disable_all", "enabled",
+    "snapshot", "reset", "summary_line", "kernel_timing_enabled",
+    "kernel_efficiency", "telemetry_section",
+    "counter_total", "counter_value", "hist_get", "hist_merge",
+    "hist_quantile", "nearest_rank", "MetricsRegistry", "Tracer",
+]
+
+REGISTRY = MetricsRegistry(enabled=True)
+TRACER = Tracer(enabled=False)
+KERNEL_TIMING = True
+
+
+def configure(metrics: Optional[bool] = None, tracing: Optional[bool] = None,
+              kernel_timing: Optional[bool] = None) -> None:
+    """Flip any subset of the three telemetry switches (None = leave)."""
+    global KERNEL_TIMING
+    if metrics is not None:
+        REGISTRY.enabled = metrics
+    if tracing is not None:
+        TRACER.enabled = tracing
+    if kernel_timing is not None:
+        KERNEL_TIMING = kernel_timing
+
+
+def disable_all() -> None:
+    configure(metrics=False, tracing=False, kernel_timing=False)
+
+
+def enabled() -> bool:
+    return REGISTRY.enabled
+
+
+def kernel_timing_enabled() -> bool:
+    return KERNEL_TIMING and REGISTRY.enabled
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def reset() -> None:
+    """Drop all recorded telemetry and restore default switches (tests)."""
+    global KERNEL_TIMING
+    REGISTRY.reset()
+    REGISTRY.enabled = True
+    TRACER.reset()
+    TRACER.enabled = False
+    KERNEL_TIMING = True
+
+
+# -- derived views -----------------------------------------------------------
+
+def kernel_efficiency(snap: Optional[dict] = None) -> dict:
+    """Measured-vs-predicted kernel report per launch geometry.
+
+    ``{geometry: {launches, measured_s, predicted_s, efficiency}}`` where
+    ``efficiency = predicted / measured`` — 1.0 means the launch ran at the
+    roofline model's bound for the TARGET hardware; far below 1.0 on this
+    CPU/interpret container is expected (the trend, not the absolute, is
+    the signal there).  Geometries come from the per-launch recording in
+    ``kernels/itemset_count/ops.py`` via ``roofline.kernel_model``."""
+    snap = snap if snap is not None else snapshot()
+    launches = snap.get("counters", {}).get("kernel_launches_total", {})
+    measured = snap.get("counters", {}).get("kernel_measured_s_total", {})
+    predicted = snap.get("counters", {}).get("kernel_predicted_s_total", {})
+    out = {}
+    for ls, n in launches.items():
+        geom = ls.replace("geometry=", "", 1) if ls else ""
+        m = measured.get(ls, 0.0)
+        p = predicted.get(ls, 0.0)
+        out[geom] = {
+            "launches": int(n),
+            "measured_s": m,
+            "predicted_s": p,
+            "efficiency": (p / m) if m > 0 else None,
+        }
+    return out
+
+
+def telemetry_section(snap: Optional[dict] = None) -> dict:
+    """The registry-backed block ``CountServer.stats()`` embeds: the raw
+    snapshot plus the derived kernel measured-vs-predicted report."""
+    snap = snap if snap is not None else snapshot()
+    return {"enabled": REGISTRY.enabled, "metrics": snap,
+            "kernel_efficiency": kernel_efficiency(snap)}
+
+
+def summary_line(snap: Optional[dict] = None) -> str:
+    """One-line telemetry rollup for entry-point exit banners:
+    launches, host blocks, cache hit rate, p95 flush latency — each part
+    shown only when something actually recorded it."""
+    snap = snap if snap is not None else snapshot()
+    parts = []
+    launches = counter_total(snap, "kernel_launches_total")
+    if launches:
+        parts.append(f"{int(launches)} kernel launches")
+    chunks = counter_total(snap, "mine_chunks_total")
+    if chunks:
+        levels = counter_total(snap, "mine_levels_total")
+        parts.append(f"{int(chunks)} chunk counts over {int(levels)} levels")
+    gfp_host = counter_value(snap, "gfp_blocks_total", path="host")
+    if gfp_host:
+        parts.append(f"{int(gfp_host)} host blocks")
+    hits = counter_total(snap, "cache_hits_total")
+    misses = counter_total(snap, "cache_misses_total")
+    if hits + misses:
+        parts.append(f"cache hit rate {hits / (hits + misses):.2f}")
+    p95 = hist_quantile(hist_merge(snap, "serve_flush_wait_ms"), 0.95)
+    if p95 is not None:
+        parts.append(f"p95 flush wait <={p95:g}ms")
+    else:
+        p95q = hist_quantile(hist_merge(snap, "serve_queue_wait_ms"), 0.95)
+        if p95q is not None:
+            parts.append(f"p95 queue wait <={p95q:g}ms")
+    if not REGISTRY.enabled:
+        return "telemetry: disabled"
+    return "telemetry: " + (", ".join(parts) if parts else "no activity")

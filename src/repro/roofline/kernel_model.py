@@ -1,0 +1,70 @@
+"""Roofline model of the ``itemset_count`` Pallas kernel, per launch geometry.
+
+The counting kernel is a (N, W)-bitmap x (K, W)-target containment sweep
+with a per-class weighted reduction: for every (row, target) pair it ANDs
+and compares W packed words, then accumulates C weight columns for the
+contained pairs.  Per launch of geometry (N, K, W, C):
+
+  bytes  = 4 * (N*W + N*C + K*W + K*C)      one pass over bitmap + weights,
+                                            targets + the (K, C) result
+  "FLOPs"= N*K * (2*W + C)                  W ANDs + W compares per pair,
+                                            plus the C-column accumulate
+                                            (integer ops priced as FLOPs at
+                                            the VPU's int32 lane rate)
+
+Predicted launch time on the TARGET hardware is the perfect-overlap roofline
+bound ``max(bytes/HBM_BW, flops/PEAK_FLOPS)`` with the same TPU v5e-class
+constants as ``roofline.analysis``.  ``record_launch`` publishes measured
+wall time against that prediction into the telemetry registry
+(``repro.obs``) so ``CountServer.stats()`` / the Prometheus export report a
+measured-vs-predicted **efficiency ratio** per geometry.
+
+Container caveat: this repo's CI box runs the kernel in Pallas interpret
+mode on CPU, so absolute efficiency there is tiny and only the TREND across
+commits is meaningful; on a real TPU the ratio is the MFU-style signal the
+autotuning ROADMAP item keys on.
+"""
+from __future__ import annotations
+
+from .analysis import HBM_BW, PEAK_FLOPS
+
+_WORD_BYTES = 4
+
+
+def kernel_flops(n: int, k: int, w: int, c: int) -> float:
+    """Integer-op count of one containment sweep, priced as FLOPs."""
+    return float(n) * float(k) * (2.0 * w + c)
+
+
+def kernel_bytes(n: int, k: int, w: int, c: int) -> float:
+    """HBM traffic of one sweep: bitmap + weights + targets + result."""
+    return _WORD_BYTES * (float(n) * w + float(n) * c
+                          + float(k) * w + float(k) * c)
+
+
+def predicted_seconds(n: int, k: int, w: int, c: int,
+                      peak_flops: float = PEAK_FLOPS,
+                      hbm_bw: float = HBM_BW) -> float:
+    """Perfect-overlap roofline bound for one launch on target hardware."""
+    return max(kernel_flops(n, k, w, c) / peak_flops,
+               kernel_bytes(n, k, w, c) / hbm_bw)
+
+
+def geometry_label(n: int, k: int, w: int, c: int) -> str:
+    """Stable per-geometry metric label.  Serving launches are block-padded,
+    so the label set stays small (one per distinct padded shape)."""
+    return f"n{n}_k{k}_w{w}_c{c}"
+
+
+def record_launch(n: int, k: int, w: int, c: int, seconds: float) -> None:
+    """Publish one measured launch against the model: three counters per
+    geometry (launch count, measured seconds, predicted seconds) — the
+    efficiency ratio is derived at snapshot time by
+    ``repro.obs.kernel_efficiency``."""
+    from ..obs import REGISTRY
+
+    geom = geometry_label(n, k, w, c)
+    REGISTRY.counter("kernel_launches_total", geometry=geom).inc()
+    REGISTRY.counter("kernel_measured_s_total", geometry=geom).inc(seconds)
+    REGISTRY.counter("kernel_predicted_s_total", geometry=geom).inc(
+        predicted_seconds(n, k, w, c))

@@ -36,7 +36,12 @@ from typing import Dict, Hashable, Optional, Sequence
 
 import numpy as np
 
+from ..obs import REGISTRY, nearest_rank
+
 Item = Hashable
+
+_M_FLUSH_ERRORS = REGISTRY.counter("serve_flush_errors_total")
+_H_FLUSH_WAIT = REGISTRY.histogram("serve_flush_wait_ms")
 
 
 class CountFuture:
@@ -105,6 +110,12 @@ class AsyncFlusher:
         self.n_flush_errors = 0
         self.flushes_by_trigger = {"occupancy": 0, "deadline": 0,
                                    "manual": 0, "drain": 0}
+        # _lat_lock guards the latency window: appends run inside _dispatch
+        # (under the SERVER lock), but stats() is a monitoring call that must
+        # not contend for — or wait on — an in-flight flush, so it cannot
+        # take the server lock; sorting the deque while _dispatch appends
+        # would raise "deque mutated during iteration" without this
+        self._lat_lock = threading.Lock()
         self.latencies_ms = deque(maxlen=latency_window)
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="count-server-flush")
@@ -142,11 +153,15 @@ class AsyncFlusher:
         if out:
             now = started if started is not None else time.monotonic()
             if self._oldest is not None:
-                self.latencies_ms.append((now - self._oldest) * 1e3)
+                wait_ms = (now - self._oldest) * 1e3
+                with self._lat_lock:
+                    self.latencies_ms.append(wait_ms)
+                _H_FLUSH_WAIT.observe(wait_ms)
             self.n_flushes += 1
             reason = self._reason or "manual"
             self.flushes_by_trigger[reason] = \
                 self.flushes_by_trigger.get(reason, 0) + 1
+            REGISTRY.counter("serve_flushes_total", trigger=reason).inc()
             for ticket, block in out.items():
                 fut = self._futures.pop(ticket, None)
                 if fut is not None:
@@ -187,6 +202,7 @@ class AsyncFlusher:
                 # an occupancy trigger would otherwise busy-spin on a
                 # persistent failure
                 self.n_flush_errors += 1
+                _M_FLUSH_ERRORS.inc()
                 self._reason = None
                 now = time.monotonic()
                 self._oldest = now
@@ -244,12 +260,20 @@ class AsyncFlusher:
         return self._closed
 
     def stats(self) -> dict:
-        lat = sorted(self.latencies_ms)
+        # snapshot under _lat_lock: _dispatch may be appending mid-flush, and
+        # iterating a deque during a concurrent append raises.  The copy is
+        # O(window), bounded by latency_window.
+        with self._lat_lock:
+            lat = sorted(self.latencies_ms)
 
         def pct(p: float) -> Optional[float]:
+            # exact nearest-rank (ceil(p*n)-th order statistic): the old
+            # ``lat[int(p * n)]`` form over-shot one rank on small samples
+            # (p50 of [1, 2] read 2; of a single sample, p95 indexed past
+            # the data but for the min() clamp).  See obs.nearest_rank.
             if not lat:
                 return None
-            return lat[min(len(lat) - 1, int(p * len(lat)))]
+            return nearest_rank(lat, p)
 
         return {
             "closed": self._closed,

@@ -17,15 +17,26 @@ cache live in ``serve.service`` / ``serve.cache``.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, Hashable, List, Sequence, Tuple
 
 import numpy as np
 
 from ..mining.encode import ItemVocab, encode_targets
+from ..obs import REGISTRY, TRACER
 
 Item = Hashable
 Key = Tuple[Item, ...]
+
+# Process-wide serving counters (thread-confined shard bumps, see repro.obs).
+# All three are recorded at the DRAIN point (``take()``), in bulk, and rolled
+# back by ``restore()`` — the submit path stays registry-free, which is what
+# keeps enabled-metrics overhead inside the obs_overhead bench's gate.
+_M_REQUESTS = REGISTRY.counter("serve_requests_total")
+_M_QUERIES = REGISTRY.counter("serve_queries_total")
+_M_DEDUPED = REGISTRY.counter("serve_deduped_queries_total")
+_H_QUEUE_WAIT = REGISTRY.histogram("serve_queue_wait_ms")
 
 
 def canonical_itemset(itemset: Sequence[Item]) -> Key:
@@ -36,10 +47,12 @@ def canonical_itemset(itemset: Sequence[Item]) -> Key:
 
 @dataclass
 class QueryRequest:
-    """One client's submitted query list (keys already canonical)."""
+    """One client's submitted query list (keys already canonical).
+    ``t_submit`` (perf_counter at submit) feeds the queue-wait histogram."""
     request_id: int
     client_id: str
     keys: List[Key]
+    t_submit: float = 0.0
 
 
 @dataclass
@@ -77,23 +90,41 @@ class MicroBatcher:
         rid = self._next_id
         self._next_id += 1
         keys = [canonical_itemset(s) for s in itemsets]
-        self._pending.append(QueryRequest(rid, client_id, keys))
+        self._pending.append(QueryRequest(rid, client_id, keys,
+                                          time.perf_counter()))
         self.n_requests += 1
         self.n_queries += len(keys)
+        # instant (not a span): the queue wait is the flush's story, and
+        # cross-thread nesting would be fake — the ticket id is the link.
+        # Guarded so the disabled path allocates nothing (not even the
+        # attrs dict) per submit.
+        if TRACER.enabled:
+            TRACER.instant("serve.submit",
+                           {"ticket": rid, "n_queries": len(keys)})
         return rid
 
     def take(self) -> BatchPlan:
         """Drain pending requests into one plan (unique keys in first-seen
         order — deterministic, so repeated workloads build identical blocks)."""
+        now = time.perf_counter()
         rows: Dict[Key, int] = {}
         unique: List[Key] = []
+        total = 0
         for req in self._pending:
+            total += len(req.keys)
             for key in req.keys:
                 if key not in rows:
                     rows[key] = len(unique)
                     unique.append(key)
-                else:
-                    self.n_deduped += 1
+        dups = total - len(unique)
+        self.n_deduped += dups
+        # registry mirrors, recorded once per drain (bulk, not per query)
+        _M_REQUESTS.inc(len(self._pending))
+        _M_QUERIES.inc(total)
+        if dups:
+            _M_DEDUPED.inc(dups)
+        _H_QUEUE_WAIT.observe_many(
+            [(now - req.t_submit) * 1e3 for req in self._pending])
         plan = BatchPlan(unique_keys=unique, rows=rows,
                          requests=self._pending)
         self._pending = []
@@ -112,6 +143,12 @@ class MicroBatcher:
         total = sum(len(r.keys) for r in requests)
         distinct = len({key for r in requests for key in r.keys})
         self.n_deduped -= total - distinct
+        # the registry mirrors are drain-time ledgers, so the rollback
+        # applies to all of them (negative bumps — exactness over
+        # monotonicity): a re-take must leave each request counted once
+        _M_REQUESTS.inc(-len(requests))
+        _M_QUERIES.inc(-total)
+        _M_DEDUPED.inc(-(total - distinct))
         self._pending = list(requests) + self._pending
 
     def stats(self) -> dict:

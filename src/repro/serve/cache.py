@@ -30,6 +30,8 @@ from typing import Any, Hashable, Optional, Tuple
 
 import numpy as np
 
+from ..obs import REGISTRY
+
 Key = Tuple[Hashable, ...]
 
 
@@ -52,6 +54,27 @@ class BudgetedLRU:
         self.misses = 0
         self.evictions = 0
         self.oversized_rejects = 0
+        self.inserts = 0        # admitted stores of a NEW key
+        self.replacements = 0   # admitted stores over a resident key
+        self.purged = 0         # entries dropped by purge_stale, cumulative
+        # Registry mirrors, labeled by cache kind (both caches share the
+        # metric names; the label keeps them separable in the export).  The
+        # per-key hot path touches only the plain int counters above;
+        # ``publish_metrics`` pushes the deltas into the registry at drain
+        # points (flush end, ``stats()``) so a warm-cache hit costs zero
+        # registry work.
+        kind = type(self).__name__
+        self._mirrors = [
+            ("hits", REGISTRY.counter("cache_hits_total", cache=kind)),
+            ("misses", REGISTRY.counter("cache_misses_total", cache=kind)),
+            ("evictions",
+             REGISTRY.counter("cache_evictions_total", cache=kind)),
+            ("inserts", REGISTRY.counter("cache_inserts_total", cache=kind)),
+            ("oversized_rejects",
+             REGISTRY.counter("cache_oversized_rejects_total", cache=kind)),
+            ("purged", REGISTRY.counter("cache_purged_total", cache=kind)),
+        ]
+        self._published = {name: 0 for name, _ in self._mirrors}
 
     def _price(self, value) -> int:
         raise NotImplementedError
@@ -88,6 +111,9 @@ class BudgetedLRU:
             return
         if k in self._d:
             self._bytes -= self._price(self._d[k])
+            self.replacements += 1
+        else:
+            self.inserts += 1
         self._d[k] = value
         self._bytes += size
         self._d.move_to_end(k)
@@ -102,7 +128,24 @@ class BudgetedLRU:
         for k in stale:
             self._bytes -= self._price(self._d[k])
             del self._d[k]
+        self.purged += len(stale)
+        self.publish_metrics()
         return len(stale)
+
+    def publish_metrics(self) -> None:
+        """Push the plain-counter deltas since the last publish into the
+        registry mirrors.  Called at drain points (flush end, purge,
+        ``stats()``) — never on the per-key path.  Deltas are withheld while
+        the registry is disabled, so nothing recorded in between is lost
+        when it is re-enabled."""
+        if not REGISTRY.enabled:
+            return
+        pub = self._published
+        for name, mirror in self._mirrors:
+            delta = getattr(self, name) - pub[name]
+            if delta:
+                mirror.inc(delta)
+                pub[name] += delta
 
     @property
     def hit_rate(self) -> float:
@@ -110,12 +153,48 @@ class BudgetedLRU:
         return self.hits / total if total else 0.0
 
     def stats(self) -> dict:
+        self.publish_metrics()
         return {"size": len(self._d), "capacity": self.capacity,
                 "bytes": self._bytes, "max_bytes": self.max_bytes,
                 "hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions,
                 "oversized_rejects": self.oversized_rejects,
+                "inserts": self.inserts,
+                "replacements": self.replacements,
+                "purged": self.purged,
                 "hit_rate": round(self.hit_rate, 4)}
+
+
+def check_cache_ledger(cache: BudgetedLRU, *,
+                       miss_driven: bool = False) -> dict:
+    """Assert the exact ledger identities every :class:`BudgetedLRU` must
+    satisfy at ANY quiescent point; returns ``cache.stats()`` for further
+    assertions.  Shared by the count-cache and rule-cache test batteries.
+
+    Internal identities (hold unconditionally):
+
+      * ``inserts - evictions - purged == size`` — every resident entry was
+        inserted exactly once and leaves by exactly one of eviction/purge;
+      * ``bytes`` equals a from-scratch recount of the resident values, and
+        respects ``max_bytes``; ``size`` respects ``capacity``.
+
+    Serving-flow identity (``miss_driven=True``): when every store is
+    triggered by a miss (the get-miss-compute-put discipline both serving
+    caches follow), ``misses - oversized_rejects == inserts + replacements``.
+    A cache populated out-of-band (warmup pre-fill) breaks only this one.
+    """
+    s = cache.stats()
+    assert s["size"] == len(cache._d)
+    assert s["inserts"] - s["evictions"] - s["purged"] == s["size"], s
+    recount = sum(cache._price(v) for v in cache._d.values())
+    assert s["bytes"] == recount == cache.nbytes, (s["bytes"], recount)
+    assert s["size"] <= s["capacity"], s
+    if cache.max_bytes is not None:
+        assert s["bytes"] <= cache.max_bytes, s
+    if miss_driven:
+        assert (s["misses"] - s["oversized_rejects"]
+                == s["inserts"] + s["replacements"]), s
+    return s
 
 
 class CountCache(BudgetedLRU):

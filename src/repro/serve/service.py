@@ -38,8 +38,10 @@ from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .. import obs
 from ..core.fpgrowth import mine_frequent
 from ..core.incremental import ceil_count, incremental_candidates
+from ..obs import REGISTRY, TRACER
 from .async_loop import AsyncFlusher, CountFuture
 from .batcher import MicroBatcher, build_masks, canonical_itemset
 from .cache import CountCache
@@ -48,6 +50,9 @@ from .store import VersionedDB
 
 Item = Hashable
 Key = Tuple[Item, ...]
+
+_H_FLUSH_MS = REGISTRY.histogram("serve_flush_ms")
+_M_APPENDS = REGISTRY.counter("serve_appends_total")
 
 
 class MiningRefreshError(RuntimeError):
@@ -199,7 +204,19 @@ class CountServer:
             # whose return value is discarded — only a manual caller can
             # claim the stash of background-answered sync tickets
             manual = self._flusher is None or self._flusher._reason is None
-            out = self._flush_impl()
+            trigger = ("sync" if self._flusher is None
+                       else (self._flusher._reason or "manual"))
+            t0 = time.perf_counter()
+            with TRACER.span("serve.flush", {"trigger": trigger}) as sp:
+                out = self._flush_impl()
+                sp.set("n_tickets", len(out))
+            if out:
+                _H_FLUSH_MS.observe((time.perf_counter() - t0) * 1e3)
+                if self._flusher is None:
+                    # async servers count flushes (by trigger) in _dispatch;
+                    # the sync-only path owns its own increment
+                    REGISTRY.counter("serve_flushes_total",
+                                     trigger="sync").inc()
             if self._flusher is not None:
                 self._flusher._dispatch(out, started=started)
                 if manual:
@@ -207,7 +224,11 @@ class CountServer:
             return out
 
     def _flush_impl(self) -> Dict[int, np.ndarray]:
-        plan = self.batcher.take()
+        with TRACER.span("serve.dedup") as sp:
+            plan = self.batcher.take()
+            sp.set("n_requests", len(plan.requests))
+            sp.set("n_queries", plan.n_queries)
+            sp.set("n_unique", len(plan.unique_keys))
         if not plan.requests:
             return {}
         try:
@@ -216,13 +237,18 @@ class CountServer:
             self.batcher.restore(plan.requests)  # failed flush is retryable
             raise
         out: Dict[int, np.ndarray] = {}
-        for req in plan.requests:
-            block = (np.stack([resolved[k] for k in req.keys])
-                     if req.keys
-                     else np.zeros((0, self.store.n_classes), np.int32))
-            out[req.request_id] = block.astype(np.int32, copy=False)
+        with TRACER.span("serve.reply", {"n_requests": len(plan.requests)}):
+            for req in plan.requests:
+                block = (np.stack([resolved[k] for k in req.keys])
+                         if req.keys
+                         else np.zeros((0, self.store.n_classes), np.int32))
+                out[req.request_id] = block.astype(np.int32, copy=False)
         self.n_flushes += 1
         self.n_queries_served += plan.n_queries
+        if self.cache is not None:
+            # drain point: push the cache's plain-counter deltas into the
+            # registry mirrors (the per-key get/put path is registry-free)
+            self.cache.publish_metrics()
         return out
 
     def _resolve(self, keys: Sequence[Key]) -> Dict[Key, np.ndarray]:
@@ -239,15 +265,22 @@ class CountServer:
             else:
                 missing.append(key)
         if missing:
-            masks, known = build_masks(missing, self.store.vocab,
-                                       self.batcher.block_k)
-            rows = self.store.counts_masks(
-                masks, block_k=self.batcher.block_k)[:len(missing)]
-            rows[~known] = 0     # unknown-item targets count exactly 0
-            for key, row in zip(missing, rows):
-                resolved[key] = row
-                if self.cache is not None:
-                    self.cache.put(key, version, row)
+            with TRACER.span("serve.count",
+                             {"n_masks": len(missing), "version": version,
+                              "cache_hits": len(keys) - len(missing)}):
+                masks, known = build_masks(missing, self.store.vocab,
+                                           self.batcher.block_k)
+                rows = self.store.counts_masks(
+                    masks, block_k=self.batcher.block_k)[:len(missing)]
+                rows[~known] = 0     # unknown-item targets count exactly 0
+            with TRACER.span("serve.cache_fill", {"n": len(missing)}):
+                for key, row in zip(missing, rows):
+                    resolved[key] = row
+                    if self.cache is not None:
+                        self.cache.put(key, version, row)
+        elif keys:
+            TRACER.instant("serve.count_skipped",
+                           {"cache_hits": len(keys), "version": version})
         return resolved
 
     def query(self, itemsets: Sequence[Sequence[Item]],
@@ -257,7 +290,8 @@ class CountServer:
         next ``flush()`` at whatever version is current then — an interleaved
         ``query()`` can neither orphan their tickets nor freeze their counts
         at an older version."""
-        with self._lock:
+        with self._lock, \
+                TRACER.span("serve.query", {"n_itemsets": len(itemsets)}):
             keys = [canonical_itemset(s) for s in itemsets]
             resolved = self._resolve(list(dict.fromkeys(keys)))
             self.n_queries_served += len(keys)
@@ -272,10 +306,14 @@ class CountServer:
         """Fold a new batch into the resident DB (version bump ⇒ cache
         invalidation) and, if mining is active, refresh the frequent set via
         the §5.2 guided recount on the engine."""
-        with self._lock:
+        with self._lock, \
+                TRACER.span("serve.append",
+                            {"n_rows": len(transactions)}) as sp:
             transactions = [list(t) for t in transactions]
             old_version = self.store.version
             version = self.store.append(transactions, classes=classes)
+            sp.set("version", version)
+            _M_APPENDS.inc()
             if version != old_version and self.cache is not None:
                 self.cache.purge_stale(version)  # every old-version row dead
             if self._theta is not None and transactions:
@@ -363,9 +401,11 @@ class CountServer:
             raise ValueError(
                 f"class_column {class_column} out of range for "
                 f"n_classes={self.store.n_classes}")
-        with self._lock:
+        with self._lock, \
+                TRACER.span("serve.mine", {"theta": theta}) as sp:
             be, choice = self._mining_backend(backend)
             self.last_backend_choice = choice
+            sp.set("backend", choice.name)
             mc = ceil_count(theta * self.store.n_rows)
             if choice.name == "gfp":
                 from ..mining.driver import mine_frequent as _driver_mine
@@ -421,4 +461,7 @@ class CountServer:
                 "mining_theta": self._theta,
                 "frequent_itemsets": (len(self._frequent)
                                       if self._theta is not None else None),
+                # registry-backed process-wide telemetry: the raw metrics
+                # snapshot plus the kernel measured-vs-predicted report
+                "telemetry": obs.telemetry_section(),
             }

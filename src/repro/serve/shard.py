@@ -60,9 +60,16 @@ import numpy as np
 from ..mining.backend import CountBackend
 from ..mining.encode import ItemVocab, extend_vocab, pad_words
 from ..mining.stream import DEFAULT_STREAM_THRESHOLD_BYTES
+from ..obs import REGISTRY
 from .store import VersionedDB, check_class_labels, counts_for_itemsets
 
 Item = Hashable
+
+# all-reduce path taken per counting sweep: mesh = one fused psum launch,
+# host_loop = per-shard sweeps summed on the host
+_M_SWEEP_MESH = REGISTRY.counter("shard_count_sweeps_total", path="mesh")
+_M_SWEEP_HOST = REGISTRY.counter("shard_count_sweeps_total", path="host_loop")
+_M_SHARD_APPENDS = REGISTRY.counter("shard_appends_total")
 
 
 class ShardedDB:
@@ -211,6 +218,7 @@ class ShardedDB:
         self._mesh_resident = None           # placement is version-stale
         self.n_appends += 1
         self.version += 1
+        _M_SHARD_APPENDS.inc()
         return self.version
 
     def compact(self) -> None:
@@ -265,7 +273,9 @@ class ShardedDB:
                 bits_d, narrow, w_d, self.mesh, data_axes=self.data_axes,
                 model_axis=None, use_kernel=self.use_kernel)
             self._mesh_launches += 1
+            _M_SWEEP_MESH.inc()
             return got
+        _M_SWEEP_HOST.inc()
         total = np.zeros((k, self.n_classes), np.int32)
         for shard in self.shards:
             total += shard.counts_masks(masks, block_k=block_k)

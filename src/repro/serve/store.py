@@ -28,6 +28,7 @@ same additivity argument that makes the base+delta composition below exact.
 """
 from __future__ import annotations
 
+import time
 from typing import Hashable, Optional, Sequence
 
 import jax.numpy as jnp
@@ -35,6 +36,7 @@ import numpy as np
 
 from ..kernels.itemset_count import itemset_counts
 from ..mining.backend import CountBackend
+from ..obs import REGISTRY, TRACER
 from ..mining.dense import DenseDB
 from ..mining.encode import (ItemVocab, class_weights, dedup_rows,
                              encode_bitmap, extend_vocab, pad_words)
@@ -42,6 +44,12 @@ from ..mining.stream import (DEFAULT_STREAM_THRESHOLD_BYTES, StreamingDB,
                              streaming_counts)
 
 Item = Hashable
+
+_M_APPENDS = REGISTRY.counter("store_appends_total")
+_M_APPEND_ROWS = REGISTRY.counter("store_appended_rows_total")
+_M_COMPACTIONS = REGISTRY.counter("store_compactions_total")
+_M_FAILED_COMPACTIONS = REGISTRY.counter("store_failed_compactions_total")
+_H_APPEND_MS = REGISTRY.histogram("store_append_ms")
 
 
 def check_class_labels(classes: Optional[Sequence[int]],
@@ -223,6 +231,7 @@ class VersionedDB:
         transactions = [list(t) for t in transactions]
         if not transactions:
             return self.version
+        t0 = time.perf_counter()
         # validate + encode BEFORE touching any store state: a rejected batch
         # must leave no trace (no vocab tail, no totals, no version bump).
         # Label-range validation comes first — the store's n_classes is fixed,
@@ -246,6 +255,8 @@ class VersionedDB:
         self.n_rows += len(transactions)
         self.n_appends += 1
         self.version += 1
+        _M_APPENDS.inc()
+        _M_APPEND_ROWS.inc(len(transactions))
         if self.delta_rows > self.merge_ratio * max(1, self.base_rows):
             try:
                 self.compact()
@@ -257,28 +268,35 @@ class VersionedDB:
                 # escaping compactor error would masquerade as a rejected
                 # append and invite a double-counting retry.
                 self.n_failed_compactions += 1
+                _M_FAILED_COMPACTIONS.inc()
+        _H_APPEND_MS.observe((time.perf_counter() - t0) * 1e3)
         return self.version
 
     def compact(self) -> None:
         """Fold the delta into the base: full re-dedup at the current vocab
         width, then residency reselection (dense vs streaming) by size.
         Pure compaction — counts (and therefore ``version``) are unchanged."""
-        w_now = self.vocab.n_words
-        base_bits = pad_words(np.asarray(self.base.bits), w_now)
-        base_w = np.asarray(self.base.weights)
-        had_delta = self._delta_bits is not None
-        if had_delta:
-            base_bits = np.concatenate([base_bits, self._delta_bits])
-            base_w = np.concatenate([base_w, self._delta_weights])
-        ub, uw = dedup_rows(base_bits, base_w)
-        # build the new base BEFORE dropping the delta: a failure here (e.g.
-        # device OOM at residency reselection) must leave the composed
-        # base+delta counts intact, not silently lose the delta rows
-        self.base = self._make_base(ub, uw)
-        if had_delta:
-            self._delta_bits = self._delta_weights = None
-            self._delta_device = None
-            self.n_compactions += 1
+        with TRACER.span("store.compact",
+                         {"base_rows": self.base_rows,
+                          "delta_rows": self.delta_rows}):
+            w_now = self.vocab.n_words
+            base_bits = pad_words(np.asarray(self.base.bits), w_now)
+            base_w = np.asarray(self.base.weights)
+            had_delta = self._delta_bits is not None
+            if had_delta:
+                base_bits = np.concatenate([base_bits, self._delta_bits])
+                base_w = np.concatenate([base_w, self._delta_weights])
+            ub, uw = dedup_rows(base_bits, base_w)
+            # build the new base BEFORE dropping the delta: a failure here
+            # (e.g. device OOM at residency reselection) must leave the
+            # composed base+delta counts intact, not silently lose the
+            # delta rows
+            self.base = self._make_base(ub, uw)
+            if had_delta:
+                self._delta_bits = self._delta_weights = None
+                self._delta_device = None
+                self.n_compactions += 1
+                _M_COMPACTIONS.inc()
 
     # -- counting -------------------------------------------------------------
     def _narrow(self, masks: np.ndarray, w_seg: int):

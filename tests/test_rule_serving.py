@@ -21,6 +21,7 @@ import pytest
 from repro.core import minority_report, optimal_rule_set
 from repro.core.mra import Rule
 from repro.serve import CountServer, RuleCache, RuleServer
+from repro.serve.cache import check_cache_ledger
 
 from _pbt import given, settings, strategies as st  # hypothesis or offline shim
 
@@ -244,21 +245,17 @@ def test_rule_cache_ledgers_exact_under_mixed_rule_count_traffic():
             srv.append(batch, classes=_labels(rng, batch))
             purged += ruler.cache.purge_stale(srv.store.version)
     cache = ruler.cache
-    st_ = cache.stats()
-    # the byte ledger is EXACT: it equals a recount over resident entries
-    assert st_["bytes"] == sum(RuleCache.entry_nbytes(v)
-                               for v in cache._d.values()) == cache.nbytes
-    assert st_["size"] == len(cache._d) <= cache.capacity
-    assert st_["bytes"] <= cache.max_bytes
-    # every miss becomes exactly one put; each admitted put is resident,
-    # evicted, or purged — the counters close the loop with no slack
+    # the shared BudgetedLRU invariants (exact byte recount, size/capacity,
+    # inserts - evictions - purged == size, and the miss-driven identity:
+    # every miss becomes exactly one put, each admitted put is resident,
+    # evicted, or purged — no slack) live in ONE helper both cache
+    # batteries assert through
+    st_ = check_cache_ledger(cache, miss_driven=True)
     assert st_["oversized_rejects"] == 1
-    assert st_["misses"] - st_["oversized_rejects"] \
-        == st_["size"] + st_["evictions"] + purged
+    assert st_["purged"] == purged
     assert st_["evictions"] > 0                  # budget actually exercised
     # count-cache ledger untouched by rule traffic beyond its own entries
-    cst = srv.cache.stats()
-    assert cst["bytes"] == srv.cache.nbytes
+    check_cache_ledger(srv.cache, miss_driven=True)
 
 
 def test_rule_cache_lru_eviction_oversized_reject_and_none_verdicts():

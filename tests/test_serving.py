@@ -24,6 +24,7 @@ from repro.serve import (CountCache, CountServer, MicroBatcher,
                          ShardedCountBackend, ShardedDB,
                          VersionedCountBackend, VersionedDB, build_masks,
                          canonical_itemset, versioned_mine_frequent)
+from repro.serve.cache import check_cache_ledger
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -297,10 +298,14 @@ def test_cache_byte_budget_eviction_and_stats():
     c.put((9,), 1, row)
     c.purge_stale(current_version=1)
     assert len(c) == 1 and c.nbytes == row.nbytes
+    # the full shared invariants (byte recount, inserts-evictions-purged ==
+    # size, budgets) — populated out-of-band, so not miss_driven
+    check_cache_ledger(c)
     # an entry bigger than the whole budget cannot be admitted
     tight = CountCache(capacity=10, max_bytes=8)
     tight.put((1,), 0, row)
     assert len(tight) == 0 and tight.nbytes == 0
+    assert check_cache_ledger(tight)["oversized_rejects"] == 1
     with pytest.raises(ValueError):
         CountCache(capacity=10, max_bytes=0)
 
@@ -313,6 +318,9 @@ def test_server_cache_bytes_budget():
     assert len(srv.cache) == 4                # LRU kept only the budget
     assert srv.cache.nbytes <= 16
     assert srv.stats()["cache"]["bytes"] <= 16
+    # serving follows get-miss-compute-put, so the full miss-driven ledger
+    # identities hold on top of the budget checks
+    assert check_cache_ledger(srv.cache, miss_driven=True)["evictions"] == 4
     # still exact: evicted probes recount on the engine
     np.testing.assert_array_equal(
         srv.query([(0,)]), _fresh_counts(tx, None, 1, [(0,)]))

@@ -36,20 +36,46 @@ echo "=== gfp smoke (differential battery + chooser pins + launch gate) ==="
 python -m pytest -q tests/test_gfp_backend.py tests/test_chooser.py
 python -m benchmarks.gfp_hybrid --smoke
 
+echo "=== obs smoke (telemetry tests + overhead bench liveness) ==="
+python -m pytest -q tests/test_obs.py
+python -m benchmarks.obs_overhead --smoke
+
+echo "=== perfgate self-test (gate must reject an injected regression) ==="
+python tools/perfgate.py --self-test
+
 echo "=== streaming perf record ==="
 python -m benchmarks.streaming --json BENCH_streaming.json
 
-echo "=== serving perf record ==="
-python -m benchmarks.serve --json BENCH_serve.json
+# Gated suites: the fresh record is written to a temp file, diffed against
+# the COMMITTED baseline by tools/perfgate.py (nonzero exit on regression,
+# leaving the baseline untouched for debugging), and only then promoted.
+gate() {  # gate <suite> <bench-module> <baseline.json>
+    local suite="$1" module="$2" baseline="$3"
+    local fresh="${baseline%.json}.fresh.json"
+    python -m "$module" --json "$fresh"
+    if [ -f "$baseline" ]; then
+        python tools/perfgate.py --suite "$suite" \
+            --baseline "$baseline" --fresh "$fresh"
+    else
+        echo "perfgate: $suite: no committed baseline, seeding $baseline"
+    fi
+    mv "$fresh" "$baseline"
+}
+
+echo "=== serving perf record (perfgate vs committed baseline) ==="
+gate serve benchmarks.serve BENCH_serve.json
 
 echo "=== mining-loop perf record ==="
 python -m benchmarks.mine_loop --json BENCH_mine.json
 
-echo "=== shard-serve perf record ==="
-python -m benchmarks.shard_serve --json BENCH_shard.json
+echo "=== shard-serve perf record (perfgate vs committed baseline) ==="
+gate shard benchmarks.shard_serve BENCH_shard.json
 
 echo "=== rule-serve perf record ==="
 python -m benchmarks.rule_serve --json BENCH_rules.json
 
-echo "=== gfp perf record (launch-reduction gate enforced in-run) ==="
-python -m benchmarks.gfp_hybrid --json BENCH_gfp.json
+echo "=== gfp perf record (launch-reduction + perfgate vs baseline) ==="
+gate gfp benchmarks.gfp_hybrid BENCH_gfp.json
+
+echo "=== obs perf record (<5% overhead gate enforced in-run) ==="
+gate obs benchmarks.obs_overhead BENCH_obs.json

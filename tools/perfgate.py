@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Perf regression gate: diff a fresh benchmark run against the committed
+``BENCH_*.json`` baseline, with per-suite metrics and tolerances.
+
+  PYTHONPATH=src python tools/perfgate.py --suite serve \\
+      --baseline BENCH_serve.json --fresh /tmp/BENCH_serve.fresh.json
+  PYTHONPATH=src python tools/perfgate.py --self-test
+
+Each suite names the metrics worth gating (the headline numbers the perf
+trajectory tracks, not every row) and how to compare them:
+
+  * ``time``  — microseconds, LOWER is better; fails when the fresh value
+    exceeds ``baseline * tolerance``.  Tolerances are deliberately generous
+    (1.6–2.0x): these runs share a CI box with everything else, and the gate
+    exists to catch step-change regressions (an accidental per-query launch,
+    a lost cache), not scheduler noise.
+  * ``ratio`` — a derived quality ratio, HIGHER is better; fails when the
+    fresh value drops below ``baseline * tolerance`` (e.g. the GFP launch
+    reduction falling from 5x toward 1x means the guided walk stopped
+    guiding).
+
+Exit status: 0 = every metric within tolerance, 1 = regression (or a metric
+missing from the fresh run — a silently vanished row must not read as a
+pass).  ``tools/ci.sh`` runs each bench into a temp file, gates it against
+the committed baseline, and only then moves the fresh record over the
+baseline.  ``--self-test`` proves the gate actually fails: it injects a
+synthetic regression into a copy of each baseline and requires the diff to
+reject it (and the unmodified copy to pass).
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import sys
+from typing import Callable, Dict, List, Optional, Tuple
+
+# metric -> (value, kind, tolerance); kind in {"time", "ratio"}
+Metrics = Dict[str, Tuple[float, str, float]]
+
+TIME_TOL = 2.0      # fresh time may be up to 2.0x the baseline
+WARM_TIME_TOL = 1.6  # warm-cache path is host-only and far less noisy
+RATIO_TOL = 0.75    # a ratio may drop to 75% of the baseline
+
+
+def _row(doc: dict, **match) -> Optional[dict]:
+    for row in doc.get("rows", []):
+        if all(row.get(k) == v for k, v in match.items()):
+            return row
+    return None
+
+
+def _serve_metrics(doc: dict) -> Metrics:
+    out: Metrics = {}
+    cold = _row(doc, variant="micro_batched", batch=64, cache="off")
+    if cold:
+        out["micro_batched_b64_cold_us"] = (cold["us_per_query"], "time",
+                                            TIME_TOL)
+    warm = _row(doc, variant="micro_batched", batch=64, cache="on")
+    if warm:
+        out["micro_batched_b64_warm_us"] = (warm["us_per_query"], "time",
+                                            WARM_TIME_TOL)
+    return out
+
+
+def _shard_metrics(doc: dict) -> Metrics:
+    out: Metrics = {}
+    best = None
+    for row in doc.get("rows", []):
+        if row.get("variant") == "sharded_mesh" and row.get("batch") == 64:
+            us = row["us_per_query"]
+            best = us if best is None else min(best, us)
+    if best is not None:
+        out["best_sharded_mesh_b64_us"] = (best, "time", TIME_TOL)
+    return out
+
+
+def _gfp_metrics(doc: dict) -> Metrics:
+    out: Metrics = {}
+    red = _row(doc, variant="launch_reduction")
+    if red:
+        out["launch_reduction_ratio"] = (red["ratio"], "ratio", RATIO_TOL)
+    hyb = _row(doc, variant="gfp/hybrid")
+    if hyb:
+        out["gfp_hybrid_total_us"] = (hyb["total_us"], "time", TIME_TOL)
+    return out
+
+
+def _obs_metrics(doc: dict) -> Metrics:
+    out: Metrics = {}
+    ov = _row(doc, variant="overhead")
+    if ov:
+        # the bench already enforces its own absolute <5% gate in-run; the
+        # perfgate additionally pins the trend against the committed record
+        out["obs_overhead_pct"] = (max(0.0, ov["overhead_pct"]) + 1.0,
+                                   "time", 5.0)
+    return out
+
+
+SUITES: Dict[str, Callable[[dict], Metrics]] = {
+    "serve": _serve_metrics,
+    "shard": _shard_metrics,
+    "gfp": _gfp_metrics,
+    "obs": _obs_metrics,
+}
+
+
+def diff(suite: str, baseline: dict, fresh: dict) -> List[str]:
+    """Compare fresh vs baseline for one suite; returns failure messages
+    (empty = pass).  A metric present in the baseline but missing from the
+    fresh run FAILS — a vanished row must not read as a pass."""
+    extract = SUITES[suite]
+    base_m, fresh_m = extract(baseline), extract(fresh)
+    failures = []
+    for name, (bval, kind, tol) in base_m.items():
+        if name not in fresh_m:
+            failures.append(f"{suite}/{name}: missing from fresh run "
+                            f"(baseline {bval:.3g})")
+            continue
+        fval = fresh_m[name][0]
+        if kind == "time":
+            limit = bval * tol
+            if fval > limit:
+                failures.append(
+                    f"{suite}/{name}: {fval:.1f} > {limit:.1f} "
+                    f"(baseline {bval:.1f} x{tol} tolerance)")
+        else:   # ratio: higher is better
+            floor = bval * tol
+            if fval < floor:
+                failures.append(
+                    f"{suite}/{name}: {fval:.3g} < {floor:.3g} "
+                    f"(baseline {bval:.3g} x{tol} floor)")
+    if not base_m:
+        failures.append(f"{suite}: no gated metrics found in baseline")
+    return failures
+
+
+def _inject_regression(suite: str, doc: dict) -> dict:
+    """Make a copy of ``doc`` that every suite's gate must reject."""
+    bad = copy.deepcopy(doc)
+    extract = SUITES[suite]
+    for row in bad.get("rows", []):
+        if "us_per_query" in row:
+            row["us_per_query"] *= 100.0
+        if "total_us" in row:
+            row["total_us"] *= 100.0
+        if row.get("variant") == "launch_reduction":
+            row["ratio"] = row["ratio"] * 0.1
+        if "overhead_pct" in row:
+            row["overhead_pct"] = 100.0
+    assert extract(bad), f"{suite}: injection produced no metrics"
+    return bad
+
+
+def self_test(baselines: Dict[str, str]) -> int:
+    """For every suite with a committed baseline: the unmodified record must
+    pass its own gate, and a synthetically regressed copy must fail."""
+    checked = 0
+    for suite, path in baselines.items():
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            print(f"self-test: {suite}: no baseline at {path}, skipped")
+            continue
+        clean = diff(suite, doc, doc)
+        if clean:
+            print(f"self-test FAILED: {suite}: identical run did not pass:")
+            for m in clean:
+                print(f"  {m}")
+            return 1
+        bad = _inject_regression(suite, doc)
+        caught = diff(suite, doc, bad)
+        if not caught:
+            print(f"self-test FAILED: {suite}: injected regression passed")
+            return 1
+        print(f"self-test: {suite}: clean pass + injected regression "
+              f"caught ({caught[0]})")
+        checked += 1
+    if checked == 0:
+        print("self-test FAILED: no baselines found to check")
+        return 1
+    print(f"self-test OK ({checked} suites)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suite", choices=sorted(SUITES))
+    ap.add_argument("--baseline", help="committed BENCH_*.json")
+    ap.add_argument("--fresh", help="freshly produced BENCH_*.json")
+    ap.add_argument("--self-test", action="store_true",
+                    help="prove the gate fails on a synthetic regression "
+                         "and passes on the unmodified baselines")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test({"serve": "BENCH_serve.json",
+                          "shard": "BENCH_shard.json",
+                          "gfp": "BENCH_gfp.json",
+                          "obs": "BENCH_obs.json"})
+    if not (args.suite and args.baseline and args.fresh):
+        ap.error("--suite, --baseline and --fresh are required "
+                 "(or use --self-test)")
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = diff(args.suite, baseline, fresh)
+    if failures:
+        print(f"perfgate: {args.suite}: REGRESSION")
+        for m in failures:
+            print(f"  {m}")
+        return 1
+    for name, (val, kind, tol) in SUITES[args.suite](fresh).items():
+        print(f"perfgate: {args.suite}/{name}: {val:.3g} ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
