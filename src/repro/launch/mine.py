@@ -69,6 +69,9 @@ def main() -> None:
                   f"{len(state['frequent'])} itemsets banked")
 
     from .. import obs
+    from ..roofline import autotune
+
+    print(f"autotune: {autotune.describe_active()}")
 
     if args.backend != "mra":
         _mine_backend(tx, args, ckpt)

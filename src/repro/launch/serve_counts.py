@@ -51,7 +51,9 @@ def main() -> None:
                     help="maintain the frequent set incrementally at theta")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--cache-size", type=int, default=65536)
-    ap.add_argument("--block-k", type=int, default=256)
+    ap.add_argument("--block-k", type=int, default=None,
+                    help="serve K-pad block (default: per-device tuning "
+                         "table, else 256)")
     ap.add_argument("--streaming", action="store_true",
                     help="force the host-resident streaming backend")
     ap.add_argument("--chunk-rows", type=int, default=None)
@@ -120,6 +122,9 @@ def main() -> None:
     st = server.store
     print(f"resident: {st.resident} DB, {st.base_rows} unique rows "
           f"(of {st.n_rows}), {st.vocab.size} items, v{st.version}")
+    from ..roofline import autotune
+    print(f"autotune: {autotune.describe_active()} "
+          f"(block_k={server.batcher.block_k})")
     ruler = None
     if args.rules:
         from ..serve import RuleServer

@@ -176,7 +176,8 @@ class StreamingBackend(CountBackend):
     the only backend with sub-level chunk granularity on a single device."""
 
     def __init__(self, db: StreamingDB, *, use_kernel: bool = True,
-                 accum: str = "vpu_int32"):
+                 accum: Optional[str] = None):
+        # accum=None defers to the tuning-table resolution in the kernel seam
         self.db = db
         self.use_kernel = use_kernel
         self.accum = accum

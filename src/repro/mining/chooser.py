@@ -45,12 +45,33 @@ import numpy as np
 from ..obs import REGISTRY
 from .stream import DEFAULT_STREAM_THRESHOLD_BYTES
 
-# Decision thresholds (first-match order documented above).
+# Decision thresholds (first-match order documented above).  These are the
+# hand-tuned FALLBACKS: thresholds passed as None resolve through the active
+# tuning table's measured launch throughput first
+# (``roofline.autotune.derived_chooser_thresholds``), so a tuned box derives
+# its dense-vs-streaming and gfp-depth crossovers from evidence.
 DEFAULT_TINY_ROWS = 2048        # below: dense, always
 DEFAULT_DENSE_DENSITY = 0.25    # mean set-bit fraction marking a "dense" DB
 DEFAULT_DEDUP_RATIO = 0.6       # unique/logical rows marking compressibility
 DEFAULT_SKEW = 4.0              # top/median item support marking heavy skew
 DEFAULT_MIN_DEPTH = 4           # pattern depth where per-level launches hurt
+
+
+def _resolved_thresholds(stream_threshold_bytes, tiny_rows, min_depth):
+    """Fill None thresholds from the tuning table's measured-throughput
+    derivations, then from the hand-tuned defaults."""
+    derived = None
+    if stream_threshold_bytes is None or tiny_rows is None or min_depth is None:
+        from ..roofline import autotune
+        derived = autotune.derived_chooser_thresholds()
+    if stream_threshold_bytes is None:
+        stream_threshold_bytes = derived.get("stream_threshold_bytes",
+                                             DEFAULT_STREAM_THRESHOLD_BYTES)
+    if tiny_rows is None:
+        tiny_rows = derived.get("tiny_rows", DEFAULT_TINY_ROWS)
+    if min_depth is None:
+        min_depth = derived.get("min_depth", DEFAULT_MIN_DEPTH)
+    return int(stream_threshold_bytes), int(tiny_rows), int(min_depth)
 
 # Trait measurement samples at most this many unique rows / columns.
 TRAIT_SAMPLE_ROWS = 4096
@@ -131,12 +152,12 @@ def choose_backend(
     *,
     mesh=None,
     max_len: int = 0,
-    stream_threshold_bytes: int = DEFAULT_STREAM_THRESHOLD_BYTES,
-    tiny_rows: int = DEFAULT_TINY_ROWS,
+    stream_threshold_bytes: Optional[int] = None,
+    tiny_rows: Optional[int] = None,
     dense_density: float = DEFAULT_DENSE_DENSITY,
     dedup_ratio: float = DEFAULT_DEDUP_RATIO,
     skew: float = DEFAULT_SKEW,
-    min_depth: int = DEFAULT_MIN_DEPTH,
+    min_depth: Optional[int] = None,
 ) -> BackendChoice:
     """Map measured traits to an engine name (decision order in the module
     docstring; first match wins).  Every verdict — whichever of the return
@@ -153,13 +174,15 @@ def _choose_backend(
     *,
     mesh=None,
     max_len: int = 0,
-    stream_threshold_bytes: int = DEFAULT_STREAM_THRESHOLD_BYTES,
-    tiny_rows: int = DEFAULT_TINY_ROWS,
+    stream_threshold_bytes: Optional[int] = None,
+    tiny_rows: Optional[int] = None,
     dense_density: float = DEFAULT_DENSE_DENSITY,
     dedup_ratio: float = DEFAULT_DEDUP_RATIO,
     skew: float = DEFAULT_SKEW,
-    min_depth: int = DEFAULT_MIN_DEPTH,
+    min_depth: Optional[int] = None,
 ) -> BackendChoice:
+    stream_threshold_bytes, tiny_rows, min_depth = _resolved_thresholds(
+        stream_threshold_bytes, tiny_rows, min_depth)
     if mesh is not None and getattr(mesh, "size", 1) > 1:
         return BackendChoice(
             "distributed",

@@ -58,7 +58,12 @@ def _resolve_streaming(db, streaming: Optional[bool],
 
 def _count_block(db, masks: np.ndarray, *, use_kernel: bool, streaming: bool,
                  chunk_rows: Optional[int]) -> np.ndarray:
-    """(K, C) counts for one target batch on either engine (bit-identical)."""
+    """(K, C) counts for one target batch on either engine (bit-identical).
+
+    No block shape is pinned here: ``itemset_counts`` / ``streaming_counts``
+    resolve block_k/block_n/accum (and, for None ``chunk_rows``, the chunk
+    size) through the active per-device tuning table
+    (``roofline.autotune.resolve_launch_config``)."""
     if streaming:
         if isinstance(db, StreamingDB):
             return np.asarray(db.counts(masks, use_kernel=use_kernel,

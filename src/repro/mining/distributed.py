@@ -45,12 +45,19 @@ def _round_up(x: int, m: int) -> int:
 
 @functools.lru_cache(maxsize=None)
 def _count_shard_fn(mesh: Mesh, data_axes: Tuple[str, ...],
-                    model_axis: Optional[str], use_kernel: bool):
+                    model_axis: Optional[str], use_kernel: bool,
+                    block_k: Optional[int] = None,
+                    block_n: Optional[int] = None,
+                    accum: Optional[str] = None):
     """Build (and cache) the jitted shard_map counting launch.
 
-    Cached on (mesh, axes, use_kernel) so repeated launches — per mining
-    level, and per chunk of a streaming sweep — reuse one executable per
-    input shape instead of re-tracing a fresh closure every call.
+    Cached on (mesh, axes, use_kernel, launch config) so repeated launches —
+    per mining level, and per chunk of a streaming sweep — reuse one
+    executable per input shape instead of re-tracing a fresh closure every
+    call.  The launch config is part of the cache key ON PURPOSE: callers
+    resolve the tuning table eagerly and pass CONCRETE values, so a table
+    swap retraces instead of silently reusing a stale config baked into a
+    cached trace.
     """
     tx_spec = P(data_axes, None)
     tgt_spec = P(model_axis, None)
@@ -69,10 +76,21 @@ def _count_shard_fn(mesh: Mesh, data_axes: Tuple[str, ...],
         check_vma=False,  # pallas_call out_shape carries no vma annotation
     )
     def count_shard(tx, tgt, wts):
-        local = itemset_counts(tx, tgt, wts, use_kernel=use_kernel)
+        local = itemset_counts(tx, tgt, wts, use_kernel=use_kernel,
+                               block_k=block_k, block_n=block_n, accum=accum)
         return jax.lax.psum(local, data_axes)
 
     return count_shard
+
+
+def _resolve_shard_config(n_local: int, k_local: int, w: int, c: int):
+    """Per-DEVICE launch config for a sharded launch: the table is keyed on
+    the geometry each device actually sees (its local row/target block), not
+    the global problem."""
+    from ..roofline import autotune
+    cfg = autotune.resolve_launch_config(max(1, n_local), max(1, k_local),
+                                         max(1, w), max(1, c))
+    return cfg.block_k, cfg.block_n, cfg.accum
 
 
 def distributed_counts(
@@ -116,14 +134,15 @@ def distributed_counts(
     k_pad = _round_up(max(k, 1), msize)
     tgt_p = np.zeros((k_pad, w), np.uint32)
     tgt_p[:k] = tgt_bits
-    count_shard = _count_shard_fn(mesh, tuple(data_axes), model_axis,
-                                  use_kernel)
 
     if chunk_rows is not None and 0 < chunk_rows < n:
         from .plan import stream_chunks
         # fixed chunk shape (zero-pad the ragged tail) and a single device
         # copy of the target block: one executable, one target upload
         n_pad = _round_up(chunk_rows, dsize)
+        count_shard = _count_shard_fn(
+            mesh, tuple(data_axes), model_axis, use_kernel,
+            *_resolve_shard_config(n_pad // dsize, k_pad // msize, w, c))
         tgt_d = jnp.asarray(tgt_p)
         txc = np.zeros((n_pad, tx_bits.shape[1]), np.uint32)
         wc = np.zeros((n_pad, c), np.int32)
@@ -152,6 +171,9 @@ def distributed_counts(
     if start_chunk >= 1:
         return base                        # single-chunk resume discipline
     n_pad = _round_up(max(n, 1), dsize)
+    count_shard = _count_shard_fn(
+        mesh, tuple(data_axes), model_axis, use_kernel,
+        *_resolve_shard_config(n_pad // dsize, k_pad // msize, w, c))
     tx_p = np.zeros((n_pad, tx_bits.shape[1]), np.uint32)
     tx_p[:n] = tx_bits
     w_p = np.zeros((n_pad, c), np.int32)
@@ -214,8 +236,11 @@ def resident_distributed_counts(
     k_pad = _round_up(k, msize)
     tgt_p = np.zeros((k_pad, w), np.uint32)
     tgt_p[:k] = tgt_bits
-    count_shard = _count_shard_fn(mesh, tuple(data_axes), model_axis,
-                                  use_kernel)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+    count_shard = _count_shard_fn(
+        mesh, tuple(data_axes), model_axis, use_kernel,
+        *_resolve_shard_config(int(tx_dev.shape[0]) // dsize,
+                               k_pad // msize, w, c))
     out = np.asarray(count_shard(tx_dev, jnp.asarray(tgt_p), w_dev))
     return np.array(out[:k], np.int32)
 

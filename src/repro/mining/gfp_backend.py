@@ -67,7 +67,17 @@ _M_CPB_REUSES = REGISTRY.counter("gfp_cpb_reuses_total")
 # host (vectorized containment); larger blocks go through the kernel.  The
 # crossover favors the host generously: a kernel launch over a few thousand
 # rows costs more in dispatch than the numpy sweep does in arithmetic.
+# ``host_rows=None`` derives the crossover from the active tuning table's
+# measured launch cost (``roofline.autotune.derived_chooser_thresholds``).
 DEFAULT_HOST_BLOCK_ROWS = 4096
+
+
+def _resolve_host_rows(host_rows):
+    if host_rows is not None:
+        return int(host_rows)
+    from ..roofline import autotune
+    derived = autotune.derived_chooser_thresholds()
+    return int(derived.get("gfp_host_rows", DEFAULT_HOST_BLOCK_ROWS))
 
 # Host containment slab budget (bytes of the (slab, P, W) uint32 broadcast).
 _HOST_SLAB_BYTES = 8 << 20
@@ -111,7 +121,7 @@ class GFPBackend(CountBackend):
     """
 
     def __init__(self, db, *, use_kernel: bool = True,
-                 host_rows: int = DEFAULT_HOST_BLOCK_ROWS,
+                 host_rows: Optional[int] = None,
                  guide: bool = True):
         self._setup(db.vocab, np.asarray(db.bits), np.asarray(db.weights),
                     int(db.n_rows), int(db.n_classes),
@@ -145,15 +155,14 @@ class GFPBackend(CountBackend):
             mine_sig={"engine": "gfp", "version": store.version}, **kw)
 
     def _setup(self, vocab, bits, weights, n_rows, n_classes, *,
-               use_kernel=True, host_rows=DEFAULT_HOST_BLOCK_ROWS,
-               guide=True, mine_sig=None):
+               use_kernel=True, host_rows=None, guide=True, mine_sig=None):
         self.vocab = vocab
         self.bits = np.ascontiguousarray(bits, np.uint32)
         self.weights = np.ascontiguousarray(weights, np.int32)
         self.n_rows = n_rows
         self.n_classes = n_classes
         self.use_kernel = use_kernel
-        self.host_rows = int(host_rows)
+        self.host_rows = _resolve_host_rows(host_rows)
         self.guide = bool(guide)
         self._mine_sig = dict(mine_sig or {})
         totals = (self.weights.sum(axis=0, dtype=np.int64)
@@ -302,7 +311,7 @@ def gfp_mine_frequent(
     class_column: Optional[int] = None,
     max_len: int = 0,
     use_kernel: bool = True,
-    host_rows: int = DEFAULT_HOST_BLOCK_ROWS,
+    host_rows: Optional[int] = None,
     guide: bool = True,
     checkpoint=None,          # Optional[MiningCheckpoint]
     on_chunk=None,
@@ -325,7 +334,7 @@ def gfp_multitude_counts(
     db,                       # DenseDB | StreamingDB
     *,
     use_kernel: bool = True,
-    host_rows: int = DEFAULT_HOST_BLOCK_ROWS,
+    host_rows: Optional[int] = None,
     guide: bool = True,
 ) -> Dict[Tuple[Item, ...], np.ndarray]:
     """The GFP-growth contract on the hybrid backend: {sorted-itemset-tuple

@@ -82,8 +82,20 @@ DEFAULT_STREAM_BUDGET_BYTES = 64 << 20   # per staging buffer (x2 in flight)
 
 def choose_chunk_rows(n_words: int, n_classes: int, *,
                       budget_bytes: int = DEFAULT_STREAM_BUDGET_BYTES,
-                      align: int = 1024) -> int:
-    """Rows per streamed chunk so one buffer (bits + weights) fits the budget."""
+                      align: int = 1024,
+                      n_rows: Optional[int] = None) -> int:
+    """Rows per streamed chunk so one buffer (bits + weights) fits the budget.
+
+    When the caller knows the total row count (``n_rows``), the active tuning
+    table gets first say: a sweep-measured ``chunk_rows`` for this geometry
+    bucket overrides the staging-budget heuristic (aligned to the kernel's
+    N-block so chunk boundaries never add padding work)."""
+    if n_rows is not None and n_rows > 0:
+        from ..roofline import autotune
+        tuned = autotune.resolve_launch_config(
+            n_rows, autotune.DEFAULT_BLOCK_K, n_words, n_classes).chunk_rows
+        if tuned is not None and tuned > 0:
+            return max(align, (int(tuned) // align) * align)
     row_bytes = 4 * (max(1, n_words) + max(1, n_classes))
     rows = budget_bytes // row_bytes
     return max(align, (rows // align) * align)

@@ -64,10 +64,10 @@ def streaming_counts(
     *,
     chunk_rows: Optional[int] = None,
     use_kernel: bool = True,
-    accum: str = "vpu_int32",
+    accum: Optional[str] = None,
     interpret: Optional[bool] = None,
-    block_k: int = 256,
-    block_n: int = 1024,
+    block_k: Optional[int] = None,
+    block_n: Optional[int] = None,
     init: Optional[np.ndarray] = None,     # (K, C) resume accumulator
     start_chunk: int = 0,
     on_chunk: Optional[Callable[[int, jnp.ndarray], None]] = None,
@@ -98,7 +98,7 @@ def streaming_counts(
             "per-class weight totals exceed int32; streamed counts could "
             "wrap — split the DB or widen the accumulator")
     if chunk_rows is None:
-        chunk_rows = choose_chunk_rows(tx.shape[1], c)
+        chunk_rows = choose_chunk_rows(tx.shape[1], c, n_rows=n)
     chunks = stream_chunks(n, chunk_rows)
     acc = (jnp.zeros((k, c), jnp.int32) if init is None
            else jnp.asarray(np.asarray(init), jnp.int32))
@@ -171,7 +171,8 @@ class StreamingDB:
             w = class_weights(classes, n_classes)
         ub, uw = dedup_rows(bits, w)
         if chunk_rows is None:
-            chunk_rows = choose_chunk_rows(vocab.n_words, n_classes)
+            chunk_rows = choose_chunk_rows(vocab.n_words, n_classes,
+                                           n_rows=ub.shape[0])
         return StreamingDB(vocab=vocab, bits=ub, weights=uw,
                            n_rows=len(transactions), n_classes=n_classes,
                            chunk_rows=chunk_rows)
@@ -182,7 +183,8 @@ class StreamingDB:
         bits = np.asarray(db.bits)
         weights = np.asarray(db.weights)
         if chunk_rows is None:
-            chunk_rows = choose_chunk_rows(bits.shape[1], weights.shape[1])
+            chunk_rows = choose_chunk_rows(bits.shape[1], weights.shape[1],
+                                           n_rows=bits.shape[0])
         return StreamingDB(vocab=db.vocab, bits=bits, weights=weights,
                            n_rows=db.n_rows, n_classes=db.n_classes,
                            chunk_rows=chunk_rows)
@@ -193,7 +195,8 @@ class StreamingDB:
                     chunk_rows: Optional[int] = None) -> "StreamingDB":
         """Wrap already-encoded/deduped host arrays (serving-store hook)."""
         if chunk_rows is None:
-            chunk_rows = choose_chunk_rows(bits.shape[1], weights.shape[1])
+            chunk_rows = choose_chunk_rows(bits.shape[1], weights.shape[1],
+                                           n_rows=np.asarray(bits).shape[0])
         return StreamingDB(vocab=vocab, bits=np.asarray(bits),
                            weights=np.asarray(weights), n_rows=n_rows,
                            n_classes=n_classes, chunk_rows=chunk_rows)
@@ -220,7 +223,7 @@ def streaming_mine_frequent(
     class_column: Optional[int] = None,
     max_len: int = 0,
     use_kernel: bool = True,
-    accum: str = "vpu_int32",
+    accum: Optional[str] = None,
     checkpoint=None,                 # Optional[MiningCheckpoint]
     on_chunk: Optional[Callable[[int, int], None]] = None,
 ) -> Dict[Tuple[Item, ...], int]:

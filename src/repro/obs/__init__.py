@@ -31,7 +31,7 @@ kernels/, and roofline/ all import it, never the reverse.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Dict, Optional
 
 from .metrics import (MetricsRegistry, counter_total, counter_value,
                       hist_get, hist_merge, hist_quantile, nearest_rank)
@@ -40,7 +40,7 @@ from .tracing import Tracer
 __all__ = [
     "REGISTRY", "TRACER", "configure", "disable_all", "enabled",
     "snapshot", "reset", "summary_line", "kernel_timing_enabled",
-    "kernel_efficiency", "telemetry_section",
+    "kernel_efficiency", "telemetry_section", "register_section",
     "counter_total", "counter_value", "hist_get", "hist_merge",
     "hist_quantile", "nearest_rank", "MetricsRegistry", "Tracer",
 ]
@@ -117,12 +117,33 @@ def kernel_efficiency(snap: Optional[dict] = None) -> dict:
     return out
 
 
+# Extension sections: higher layers (which import obs — never the reverse)
+# contribute named blocks to the telemetry report by registering a provider.
+# Keeps this package stdlib-only while letting e.g. roofline.autotune expose
+# its active-table + staleness state through CountServer.stats().
+_SECTIONS: Dict[str, Callable[[], dict]] = {}
+
+
+def register_section(name: str, provider: Callable[[], dict]) -> None:
+    """Register (or replace) a named provider merged into every
+    :func:`telemetry_section` result.  Provider errors are captured per
+    section, never propagated — telemetry must not take down serving."""
+    _SECTIONS[name] = provider
+
+
 def telemetry_section(snap: Optional[dict] = None) -> dict:
     """The registry-backed block ``CountServer.stats()`` embeds: the raw
-    snapshot plus the derived kernel measured-vs-predicted report."""
+    snapshot plus the derived kernel measured-vs-predicted report, plus any
+    registered extension sections (e.g. ``autotune``)."""
     snap = snap if snap is not None else snapshot()
-    return {"enabled": REGISTRY.enabled, "metrics": snap,
-            "kernel_efficiency": kernel_efficiency(snap)}
+    out = {"enabled": REGISTRY.enabled, "metrics": snap,
+           "kernel_efficiency": kernel_efficiency(snap)}
+    for name, provider in _SECTIONS.items():
+        try:
+            out[name] = provider()
+        except Exception as e:  # pragma: no cover - defensive
+            out[name] = {"error": f"{type(e).__name__}: {e}"}
+    return out
 
 
 def summary_line(snap: Optional[dict] = None) -> str:

@@ -1,1 +1,6 @@
+from . import autotune
 from .analysis import Roofline, analyze, collective_bytes, model_flops
+from .autotune import (LaunchConfig, TuningTable, derived_chooser_thresholds,
+                       resolve_launch_config, staleness_report)
+from .kernel_model import (geometry_bucket, geometry_label, kernel_bytes,
+                           kernel_flops, predicted_seconds, record_launch)

@@ -26,6 +26,9 @@ autotuning ROADMAP item keys on.
 """
 from __future__ import annotations
 
+import re
+from typing import Tuple
+
 from .analysis import HBM_BW, PEAK_FLOPS
 
 _WORD_BYTES = 4
@@ -51,19 +54,81 @@ def predicted_seconds(n: int, k: int, w: int, c: int,
 
 
 def geometry_label(n: int, k: int, w: int, c: int) -> str:
-    """Stable per-geometry metric label.  Serving launches are block-padded,
-    so the label set stays small (one per distinct padded shape)."""
+    """EXACT per-geometry label (debug/report use).  Telemetry records under
+    :func:`geometry_bucket` instead — see below."""
     return f"n{n}_k{k}_w{w}_c{c}"
+
+
+# -- geometry bucketing ------------------------------------------------------
+#
+# Telemetry labels and tuning-table keys are BUCKETIZED geometries: each
+# dimension rounds UP to a power of two inside a clamped range, so however
+# adversarial the query mix (one distinct N per append, one distinct K per
+# query shape) the label set stays bounded and the metrics registry cannot
+# grow without limit.  The roofline PREDICTION still uses the exact geometry
+# — only the label under which it is aggregated is rounded.  A hard cap
+# backstops the clamp: once ``MAX_GEOMETRY_BUCKETS`` distinct buckets exist,
+# any new bucket collapses into the single ``GEOMETRY_OVERFLOW`` label.
+
+_BUCKET_RANGES = ((128, 1 << 26),   # n: kernel pads rows to 128 anyway
+                  (8, 1 << 20),     # k: kernel pads targets to 8
+                  (1, 64),          # w: MAX_KERNEL_WORDS
+                  (1, 16))          # c: class columns
+MAX_GEOMETRY_BUCKETS = 256
+GEOMETRY_OVERFLOW = "overflow"
+_BUCKET_RE = re.compile(r"n(\d+)_k(\d+)_w(\d+)_c(\d+)")
+_SEEN_BUCKETS: set = set()
+
+
+def _bucket_dim(x: int, lo: int, hi: int) -> int:
+    x = max(int(x), 1)
+    p2 = 1 << (x - 1).bit_length()     # round up to a power of two
+    return min(max(p2, lo), hi)
+
+
+def geometry_bucket(n: int, k: int, w: int, c: int) -> str:
+    """Bucketized geometry label: pow2-rounded, range-clamped dimensions."""
+    bn, bk, bw, bc = (_bucket_dim(x, lo, hi)
+                      for x, (lo, hi) in zip((n, k, w, c), _BUCKET_RANGES))
+    return f"n{bn}_k{bk}_w{bw}_c{bc}"
+
+
+def bucket_shape(bucket: str) -> Tuple[int, int, int, int]:
+    """Parse ``"nN_kK_wW_cC"`` back to ``(n, k, w, c)`` (ValueError if not
+    a geometry bucket — e.g. the overflow label)."""
+    m = _BUCKET_RE.fullmatch(bucket)
+    if m is None:
+        raise ValueError(f"not a geometry bucket label: {bucket!r}")
+    return tuple(int(g) for g in m.groups())  # type: ignore[return-value]
+
+
+def _bucket_label(n: int, k: int, w: int, c: int) -> str:
+    """Bucket label with the hard cardinality cap applied."""
+    b = geometry_bucket(n, k, w, c)
+    if b in _SEEN_BUCKETS:
+        return b
+    if len(_SEEN_BUCKETS) >= MAX_GEOMETRY_BUCKETS:
+        return GEOMETRY_OVERFLOW
+    _SEEN_BUCKETS.add(b)
+    return b
+
+
+def _reset_geometry_buckets() -> None:
+    """Drop the seen-bucket cap state (tests only)."""
+    _SEEN_BUCKETS.clear()
 
 
 def record_launch(n: int, k: int, w: int, c: int, seconds: float) -> None:
     """Publish one measured launch against the model: three counters per
-    geometry (launch count, measured seconds, predicted seconds) — the
-    efficiency ratio is derived at snapshot time by
-    ``repro.obs.kernel_efficiency``."""
+    geometry BUCKET (launch count, measured seconds, predicted seconds) —
+    the efficiency ratio is derived at snapshot time by
+    ``repro.obs.kernel_efficiency``.  The prediction uses the exact
+    geometry; only the aggregation label is bucketized (bounded label set,
+    and the same keys the tuning table uses — closing the feedback loop in
+    ``roofline.autotune.staleness_report``)."""
     from ..obs import REGISTRY
 
-    geom = geometry_label(n, k, w, c)
+    geom = _bucket_label(n, k, w, c)
     REGISTRY.counter("kernel_launches_total", geometry=geom).inc()
     REGISTRY.counter("kernel_measured_s_total", geometry=geom).inc(seconds)
     REGISTRY.counter("kernel_predicted_s_total", geometry=geom).inc(

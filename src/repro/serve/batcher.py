@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Hashable, List, Sequence, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -71,7 +71,11 @@ class MicroBatcher:
     """Accumulates (client_id, itemsets) requests; ``take()`` drains them into
     one deduplicated :class:`BatchPlan`."""
 
-    def __init__(self, block_k: int = 256):
+    def __init__(self, block_k: Optional[int] = None):
+        # None = the tuning-table default; explicit values pin the pad size
+        if block_k is None:
+            from ..roofline import autotune
+            block_k = autotune.DEFAULT_BLOCK_K
         if block_k <= 0:
             raise ValueError("block_k must be positive")
         self.block_k = block_k
@@ -160,16 +164,20 @@ class MicroBatcher:
 def build_masks(
     keys: Sequence[Key],
     vocab: ItemVocab,
-    block_k: int = 256,
+    block_k: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Encode unique targets into a (K_pad, W) block, K_pad a ``block_k``
     multiple (zero rows pad the tail; their counts are sliced off).
+    ``block_k=None`` pads to the autotuner's default K-block.
 
     Returns ``(masks, known)`` where ``known[i]`` is False for keys naming
     items outside the vocab: those get an all-zero mask row, and since an
     empty mask is contained in EVERY row, the caller must zero their counts
     (the exact count of a never-seen item's itemset is 0).
     """
+    if block_k is None:
+        from ..roofline import autotune
+        block_k = autotune.DEFAULT_BLOCK_K
     k = len(keys)
     k_pad = max(block_k, ((k + block_k - 1) // block_k) * block_k)
     masks = np.zeros((k_pad, vocab.n_words), np.uint32)

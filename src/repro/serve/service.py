@@ -119,7 +119,7 @@ class CountServer:
         cache_size: int = 65536,
         cache_bytes: Optional[int] = None,
         cache: bool = True,
-        block_k: int = 256,
+        block_k: Optional[int] = None,
         merge_ratio: float = 0.25,
         shards: Optional[int] = None,
         mesh=None,
@@ -140,6 +140,11 @@ class CountServer:
                 transactions, classes=classes, n_classes=n_classes,
                 use_kernel=use_kernel, streaming=streaming,
                 chunk_rows=chunk_rows, merge_ratio=merge_ratio)
+        if block_k is None:
+            # tune the serve pad size to the resident geometry: the table is
+            # keyed on the bucket the store's sweeps will actually launch
+            from ..roofline import autotune
+            block_k = autotune.resolve_serve_block_k(self.store)
         self.batcher = MicroBatcher(block_k=block_k)
         self.cache: Optional[CountCache] = \
             CountCache(cache_size, max_bytes=cache_bytes) if cache else None

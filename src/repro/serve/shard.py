@@ -59,7 +59,6 @@ import numpy as np
 
 from ..mining.backend import CountBackend
 from ..mining.encode import ItemVocab, extend_vocab, pad_words
-from ..mining.stream import DEFAULT_STREAM_THRESHOLD_BYTES
 from ..obs import REGISTRY
 from .store import VersionedDB, check_class_labels, counts_for_itemsets
 
@@ -93,7 +92,7 @@ class ShardedDB:
         use_kernel: bool = True,
         streaming: Optional[bool] = None,
         chunk_rows: Optional[int] = None,
-        stream_threshold_bytes: int = DEFAULT_STREAM_THRESHOLD_BYTES,
+        stream_threshold_bytes: Optional[int] = None,
         merge_ratio: float = 0.25,
     ):
         if n_shards <= 0:

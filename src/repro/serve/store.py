@@ -40,8 +40,7 @@ from ..obs import REGISTRY, TRACER
 from ..mining.dense import DenseDB
 from ..mining.encode import (ItemVocab, class_weights, dedup_rows,
                              encode_bitmap, extend_vocab, pad_words)
-from ..mining.stream import (DEFAULT_STREAM_THRESHOLD_BYTES, StreamingDB,
-                             streaming_counts)
+from ..mining.stream import StreamingDB, streaming_counts
 
 Item = Hashable
 
@@ -93,7 +92,7 @@ class VersionedDB:
         use_kernel: bool = True,
         streaming: Optional[bool] = None,
         chunk_rows: Optional[int] = None,
-        stream_threshold_bytes: int = DEFAULT_STREAM_THRESHOLD_BYTES,
+        stream_threshold_bytes: Optional[int] = None,
         merge_ratio: float = 0.25,
     ):
         self.n_classes = check_class_labels(classes, n_classes)

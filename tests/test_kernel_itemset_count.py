@@ -205,12 +205,14 @@ def test_mxu_f32_exact_near_2p24_bound():
     assert int(np.asarray(got_mxu)[0, 0]) == (1 << 24) - 8
 
 
-def test_mxu_f32_row_bound_asserted():
+def test_mxu_f32_row_bound_raises_value_error():
     """N >= 2^24 rows per launch must be rejected (ops.py exactness guard);
-    the streaming engine re-establishes the bound per chunk instead."""
+    the streaming engine re-establishes the bound per chunk instead.  A real
+    ValueError with the geometry — not a bare assert that ``python -O``
+    strips — and raised BEFORE any device work."""
     n = 1 << 24
     tx = jnp.zeros((n, 1), jnp.uint32)
     tgt = jnp.zeros((1, 1), jnp.uint32)
     w = jnp.ones((n, 1), jnp.int32)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match=r"N < 2\^24.*N=16777216"):
         itemset_counts(tx, tgt, w, accum="mxu_f32")

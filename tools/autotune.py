@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Offline autotune sweep: micro-benchmark the launch-config lattice and
+persist the per-(device-kind, geometry-bucket) winners as a versioned JSON
+tuning table (``src/repro/roofline/autotune.py`` is the library; this is
+the operator entry point).
+
+  PYTHONPATH=src python tools/autotune.py                 # CI preset
+  PYTHONPATH=src python tools/autotune.py --preset serve
+  PYTHONPATH=src python tools/autotune.py -g 16384,256,2,2 -g 4096,256,2,2
+  PYTHONPATH=src python tools/autotune.py --smoke         # CI sanity check
+
+The table lands at the in-repo committed path for this device kind by
+default (``--out ~/.cache/...`` for a user-local table; the resolution
+seam prefers ``$REPRO_TUNE_TABLE`` → user cache → repo table).  Every run
+round-trips the saved file through the schema-checked loader and proves it
+resolves before reporting success.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+# Geometry presets: (N, K, W, C) per launch.  "ci" covers the buckets the
+# benchmark workloads touch, with >= 2 distinct row buckets so the derived
+# chooser thresholds (launch-cost fit) have a slope to fit.
+PRESETS = {
+    "ci": [(16384, 256, 2, 2), (4096, 256, 2, 2), (1024, 256, 2, 2)],
+    "serve": [(16384, 256, 2, 2), (65536, 256, 2, 2)],
+    "mine": [(30000, 512, 1, 1), (4096, 512, 1, 1), (1024, 256, 1, 1)],
+}
+
+
+def _parse_geometry(text: str):
+    parts = [int(p) for p in text.replace("x", ",").split(",") if p]
+    if len(parts) != 4 or any(p <= 0 for p in parts):
+        raise argparse.ArgumentTypeError(
+            f"geometry must be 4 positive ints N,K,W,C — got {text!r}")
+    return tuple(parts)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("-g", "--geometry", action="append", default=[],
+                    type=_parse_geometry, metavar="N,K,W,C",
+                    help="launch geometry to tune (repeatable)")
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="ci",
+                    help="geometry preset when no -g given (default: ci)")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="best-of-N timing per candidate (default: 5)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: the in-repo committed "
+                         "table for this device kind)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep to a temp file; assert the table "
+                         "saves, loads, and resolves")
+    args = ap.parse_args()
+
+    from repro.roofline import autotune
+
+    kind = autotune.device_kind()
+    created = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+
+    if args.smoke:
+        import tempfile
+
+        geometries = [(256, 16, 1, 1), (1024, 16, 1, 1)]
+        table = autotune.sweep(geometries, repeats=2, block_ks=(128, 256),
+                               created=created, log=print)
+        out = args.out or tempfile.mktemp(prefix="autotune_smoke_",
+                                          suffix=".json")
+        autotune.save_table(table, out)
+        loaded = autotune.load_table(out)
+        assert loaded.entries, "smoke sweep produced an empty table"
+        assert loaded.device_kind == kind
+        autotune.set_active_table(loaded)
+        try:
+            cfg = autotune.resolve_launch_config(256, 16, 1, 1)
+            assert cfg.source == "table", cfg
+        finally:
+            autotune.set_active_table(None)
+        print(f"autotune smoke OK ({len(loaded.entries)} entries, "
+              f"saved+loaded+resolved via {out})")
+        return 0
+
+    geometries = args.geometry or PRESETS[args.preset]
+    t0 = time.perf_counter()
+    table = autotune.sweep(geometries, repeats=args.repeats,
+                           created=created, log=print)
+    dt = time.perf_counter() - t0
+
+    out = args.out or autotune.repo_table_path(kind)
+    autotune.save_table(table, out)
+    loaded = autotune.load_table(out)     # prove the round trip
+    assert len(loaded.entries) == len(table.entries)
+
+    print(f"\ntuning table [{kind}] {len(table.entries)} buckets "
+          f"in {dt:.1f}s -> {out}")
+    for bucket, e in sorted(table.entries.items()):
+        print(f"  {bucket}: bk{e.config.block_k}/{e.config.accum}"
+              f" chunk_rows={e.config.chunk_rows or 'auto'}"
+              f" serve_block_k={e.serve_block_k or 'default'}"
+              f" ({e.us:.0f}us, eff={e.efficiency:.3g})")
+    derived = autotune.derived_chooser_thresholds(loaded)
+    if derived:
+        print(f"derived chooser thresholds: {derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

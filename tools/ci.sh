@@ -40,6 +40,11 @@ echo "=== obs smoke (telemetry tests + overhead bench liveness) ==="
 python -m pytest -q tests/test_obs.py
 python -m benchmarks.obs_overhead --smoke
 
+echo "=== autotune smoke (lattice invariance + sweep/save/load/resolve) ==="
+python -m pytest -q tests/test_autotune.py
+python tools/autotune.py --smoke
+python -m benchmarks.autotune --smoke
+
 echo "=== perfgate self-test (gate must reject an injected regression) ==="
 python tools/perfgate.py --self-test
 
@@ -79,3 +84,6 @@ gate gfp benchmarks.gfp_hybrid BENCH_gfp.json
 
 echo "=== obs perf record (<5% overhead gate enforced in-run) ==="
 gate obs benchmarks.obs_overhead BENCH_obs.json
+
+echo "=== autotune perf record (tuned >= default floor + perfgate) ==="
+gate tune benchmarks.autotune BENCH_tune.json

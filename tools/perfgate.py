@@ -97,11 +97,24 @@ def _obs_metrics(doc: dict) -> Metrics:
     return out
 
 
+def _tune_metrics(doc: dict) -> Metrics:
+    """Autotune gate: tuned-vs-default speedup per workload (a ratio — must
+    not collapse below the baseline's floor) plus the tuned wall time."""
+    out: Metrics = {}
+    for variant in ("serve_warm", "gfp_depth6"):
+        row = _row(doc, variant=variant)
+        if row:
+            out[f"{variant}_speedup"] = (row["speedup"], "ratio", RATIO_TOL)
+            out[f"{variant}_tuned_us"] = (row["tuned_us"], "time", TIME_TOL)
+    return out
+
+
 SUITES: Dict[str, Callable[[dict], Metrics]] = {
     "serve": _serve_metrics,
     "shard": _shard_metrics,
     "gfp": _gfp_metrics,
     "obs": _obs_metrics,
+    "tune": _tune_metrics,
 }
 
 
@@ -148,6 +161,10 @@ def _inject_regression(suite: str, doc: dict) -> dict:
             row["ratio"] = row["ratio"] * 0.1
         if "overhead_pct" in row:
             row["overhead_pct"] = 100.0
+        if "speedup" in row:
+            row["speedup"] *= 0.1
+        if "tuned_us" in row:
+            row["tuned_us"] *= 100.0
     assert extract(bad), f"{suite}: injection produced no metrics"
     return bad
 
@@ -198,7 +215,8 @@ def main() -> int:
         return self_test({"serve": "BENCH_serve.json",
                           "shard": "BENCH_shard.json",
                           "gfp": "BENCH_gfp.json",
-                          "obs": "BENCH_obs.json"})
+                          "obs": "BENCH_obs.json",
+                          "tune": "BENCH_tune.json"})
     if not (args.suite and args.baseline and args.fresh):
         ap.error("--suite, --baseline and --fresh are required "
                  "(or use --self-test)")
