@@ -1,0 +1,253 @@
+"""jit/Pallas safety checker: tracer leaks, bare asserts, host syncs.
+
+The PR 8 autotuner's contract is that launch configs resolve EAGERLY so jit
+statics stay concrete; the flip side is that anything reaching a jit-traced
+function body is (potentially) a tracer, and Python-level control flow or
+scalar conversion on a tracer fails at trace time — or worse, silently
+specializes.  This checker finds jit-visible functions and flags:
+
+* **JIT001** — ``float()``/``int()``/``bool()``/``.item()``/``.tolist()``
+  on a traced argument (or a value derived from one) inside a jit scope;
+* **JIT002** — Python branching (``if``/``while``/``assert``) whose test
+  mentions a traced value;
+* **JIT003** — a bare ``assert`` in a hot-path module (``kernels/``,
+  ``mining/``, ``serve/``): it vanishes under ``python -O``, so invariants
+  on user-reachable paths must be typed exceptions (the PR 8 ``ops.py``
+  precedent);
+* **JIT004** — host syncs (``block_until_ready``, ``jax.device_get``,
+  ``np.asarray``/``np.array`` on traced values) inside a jit scope.
+
+Jit-visible functions are those decorated with ``jax.jit`` (directly or
+through ``functools.partial(jax.jit, ...)``), passed by name to a
+``jax.jit(...)`` call, or used as a Pallas kernel body (first argument of
+``pl.pallas_call``, possibly through ``functools.partial``).  Statics are
+exempt from tainting: names listed in a literal ``static_argnames``,
+keyword-only parameters (this repo's convention for statics — every kernel
+entry point takes arrays positionally and config keyword-only), and
+parameters annotated with Python scalar types.  ``.shape``/``.ndim``/
+``.dtype``/``len()`` of a traced array are concrete and break the taint.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set
+
+from .engine import Checker, Finding, Module, attr_chain, call_name, names_in
+
+_SCALAR_ANNOTATIONS = {"int", "float", "bool", "str"}
+_CAST_CALLS = {"float", "int", "bool"}
+_HOST_SYNC_ATTRS = {"block_until_ready", "item", "tolist"}
+
+
+def _decorator_marks_jit(dec: ast.AST) -> Optional[Set[str]]:
+    """If this decorator applies jax.jit, return the literal
+    ``static_argnames`` (empty set if none given), else None."""
+    chain = attr_chain(dec)
+    if chain is not None and chain[-1] == "jit":
+        return set()
+    if isinstance(dec, ast.Call):
+        fn_chain = attr_chain(dec.func)
+        if fn_chain is not None and fn_chain[-1] == "jit":
+            return _literal_statics(dec.keywords)
+        # functools.partial(jax.jit, static_argnames=...)
+        if fn_chain is not None and fn_chain[-1] == "partial" and dec.args:
+            inner = attr_chain(dec.args[0])
+            if inner is not None and inner[-1] == "jit":
+                return _literal_statics(dec.keywords)
+    return None
+
+
+def _literal_statics(keywords: Sequence[ast.keyword]) -> Set[str]:
+    out: Set[str] = set()
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and \
+                        isinstance(sub.value, str):
+                    out.add(sub.value)
+    return out
+
+
+class JitSafetyChecker(Checker):
+    name = "jit_safety"
+    codes = {
+        "JIT001": "Python scalar conversion of a traced value in a jit "
+                  "scope (trace-time failure or silent specialization)",
+        "JIT002": "Python branching on a traced value in a jit scope",
+        "JIT003": "bare assert in a hot-path module (vanishes under "
+                  "python -O; use a typed exception with context)",
+        "JIT004": "host sync inside a jit scope",
+    }
+
+    def __init__(self,
+                 hot_prefixes: Sequence[str] = ("kernels/", "mining/",
+                                                "serve/")):
+        self.hot_prefixes = tuple(hot_prefixes)
+
+    def check_module(self, mod: Module) -> List[Finding]:
+        findings: List[Finding] = []
+        jit_funcs = self._find_jit_functions(mod)
+        for func, statics, why in jit_funcs:
+            findings.extend(self._check_jit_body(mod, func, statics, why))
+        if mod.rel.startswith(self.hot_prefixes) or \
+                self.hot_prefixes == ("",):
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Assert):
+                    findings.append(mod.finding(
+                        node.lineno, "JIT003",
+                        "bare assert on a hot path: disabled under "
+                        "python -O — raise a typed exception with "
+                        "geometry/context instead", self.name))
+        return findings
+
+    # -- jit-visible function discovery --------------------------------------
+
+    def _find_jit_functions(self, mod: Module):
+        by_name: Dict[str, ast.AST] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                by_name.setdefault(node.name, node)
+
+        out = []
+        seen: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    statics = _decorator_marks_jit(dec)
+                    if statics is not None and node.name not in seen:
+                        seen.add(node.name)
+                        out.append((node, statics, "decorated with jax.jit"))
+                        break
+            elif isinstance(node, ast.Call):
+                fn_chain = attr_chain(node.func)
+                if fn_chain is None:
+                    continue
+                tail = fn_chain[-1]
+                if tail == "jit" and node.args and \
+                        isinstance(node.args[0], ast.Name):
+                    target = by_name.get(node.args[0].id)
+                    if target is not None and target.name not in seen:
+                        seen.add(target.name)
+                        out.append((target, _literal_statics(node.keywords),
+                                    "passed to jax.jit(...)"))
+                elif tail == "pallas_call" and node.args:
+                    kernel_arg = node.args[0]
+                    kname = None
+                    if isinstance(kernel_arg, ast.Name):
+                        kname = kernel_arg.id
+                    elif isinstance(kernel_arg, ast.Call) and \
+                            call_name(kernel_arg) == "partial" and \
+                            kernel_arg.args and \
+                            isinstance(kernel_arg.args[0], ast.Name):
+                        kname = kernel_arg.args[0].id
+                    target = by_name.get(kname) if kname else None
+                    if target is not None and target.name not in seen:
+                        seen.add(target.name)
+                        out.append((target, set(), "Pallas kernel body"))
+        return out
+
+    # -- body analysis --------------------------------------------------------
+
+    def _check_jit_body(self, mod: Module, func: ast.AST, statics: Set[str],
+                        why: str) -> List[Finding]:
+        tainted: Set[str] = set()
+        args = func.args
+        for a in args.args + args.posonlyargs:
+            ann = getattr(a.annotation, "id", None)
+            if a.arg in statics or a.arg == "self" or \
+                    ann in _SCALAR_ANNOTATIONS:
+                continue
+            tainted.add(a.arg)
+        # keyword-only params are this repo's static-config convention
+        # (block_k / accum / n_words are bound concrete before tracing)
+
+        findings: List[Finding] = []
+
+        def is_tainted(expr: ast.AST) -> bool:
+            return bool(names_in(expr) & tainted)
+
+        def breaks_taint(expr: ast.AST) -> bool:
+            """Concrete-at-trace-time projections of a traced array."""
+            if isinstance(expr, ast.Attribute) and \
+                    expr.attr in ("shape", "ndim", "dtype", "size"):
+                return True
+            if isinstance(expr, ast.Subscript):
+                return breaks_taint(expr.value)
+            if isinstance(expr, ast.Call) and call_name(expr) == "len":
+                return True
+            if isinstance(expr, ast.Tuple):
+                return all(breaks_taint(e) for e in expr.elts)
+            return False
+
+        class V(ast.NodeVisitor):
+            def visit_FunctionDef(self, node):
+                if node is func:
+                    self.generic_visit(node)
+                # nested defs: still traced (closures inside jit) — recurse
+                else:
+                    self.generic_visit(node)
+
+            visit_AsyncFunctionDef = visit_FunctionDef
+
+            def visit_Assign(self, node):
+                if is_tainted(node.value) and not breaks_taint(node.value):
+                    for tgt in node.targets:
+                        tainted.update(names_in(tgt))
+                self.generic_visit(node)
+
+            def visit_Call(self, node):
+                cname = call_name(node)
+                if cname in _CAST_CALLS and node.args and \
+                        is_tainted(node.args[0]):
+                    findings.append(mod.finding(
+                        node.lineno, "JIT001",
+                        f"{cname}() on traced value in {func.name} "
+                        f"({why})", JitSafetyChecker.name))
+                elif cname in ("asarray", "array", "device_get") and \
+                        node.args and is_tainted(node.args[0]):
+                    chain = attr_chain(node.func) or ()
+                    if chain[:1] in (("np",), ("numpy",), ("jax",)):
+                        findings.append(mod.finding(
+                            node.lineno, "JIT004",
+                            f"host transfer {'.'.join(chain)}() on traced "
+                            f"value in {func.name} ({why})",
+                            JitSafetyChecker.name))
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in _HOST_SYNC_ATTRS and \
+                        is_tainted(node.func.value):
+                    code = "JIT001" if node.func.attr in ("item", "tolist") \
+                        else "JIT004"
+                    findings.append(mod.finding(
+                        node.lineno, code,
+                        f".{node.func.attr}() on traced value in "
+                        f"{func.name} ({why})", JitSafetyChecker.name))
+                self.generic_visit(node)
+
+            def visit_If(self, node):
+                if is_tainted(node.test):
+                    findings.append(mod.finding(
+                        node.lineno, "JIT002",
+                        f"Python `if` on traced value in {func.name} "
+                        f"({why}) — use jnp.where / lax.cond / pl.when",
+                        JitSafetyChecker.name))
+                self.generic_visit(node)
+
+            def visit_While(self, node):
+                if is_tainted(node.test):
+                    findings.append(mod.finding(
+                        node.lineno, "JIT002",
+                        f"Python `while` on traced value in {func.name} "
+                        f"({why})", JitSafetyChecker.name))
+                self.generic_visit(node)
+
+            def visit_Assert(self, node):
+                if is_tainted(node.test):
+                    findings.append(mod.finding(
+                        node.lineno, "JIT002",
+                        f"assert on traced value in {func.name} ({why})",
+                        JitSafetyChecker.name))
+                self.generic_visit(node)
+
+        for stmt in func.body:
+            V().visit(stmt)
+        return findings

@@ -18,10 +18,23 @@ def itemset_counts_ref(tx_bits: jnp.ndarray, tgt_bits: jnp.ndarray,
                        weights: jnp.ndarray) -> jnp.ndarray:
     """tx_bits (N, W) uint32; tgt_bits (K, W) uint32; weights (N, C) int32
     -> counts (K, C) int32."""
-    assert tx_bits.dtype == jnp.uint32 and tgt_bits.dtype == jnp.uint32
-    assert tx_bits.ndim == 2 and tgt_bits.ndim == 2 and weights.ndim == 2
-    assert tx_bits.shape[1] == tgt_bits.shape[1]
-    assert tx_bits.shape[0] == weights.shape[0]
+    if tx_bits.dtype != jnp.uint32 or tgt_bits.dtype != jnp.uint32:
+        raise TypeError(
+            f"itemset_counts_ref: bitmap dtypes must be uint32, got "
+            f"tx={tx_bits.dtype} tgt={tgt_bits.dtype}")
+    if tx_bits.ndim != 2 or tgt_bits.ndim != 2 or weights.ndim != 2:
+        raise ValueError(
+            f"itemset_counts_ref: expected 2-D (N,W)/(K,W)/(N,C) inputs, "
+            f"got ndim tx={tx_bits.ndim} tgt={tgt_bits.ndim} "
+            f"w={weights.ndim}")
+    if tx_bits.shape[1] != tgt_bits.shape[1]:
+        raise ValueError(
+            f"itemset_counts_ref: word-width mismatch: tx W="
+            f"{tx_bits.shape[1]} vs tgt W={tgt_bits.shape[1]}")
+    if tx_bits.shape[0] != weights.shape[0]:
+        raise ValueError(
+            f"itemset_counts_ref: row mismatch: tx N={tx_bits.shape[0]} "
+            f"vs weights N={weights.shape[0]}")
     # (K, N, W): does transaction n contain target k's bits of word w?
     hit = (tx_bits[None, :, :] & tgt_bits[:, None, :]) == tgt_bits[:, None, :]
     contained = jnp.all(hit, axis=-1)  # (K, N)

@@ -234,6 +234,19 @@ class DenseMRAResult:
     engine: str = "dense"
 
 
+def _crosscheck_fused(itemset, fused_count: int, discovered_count: int,
+                      engine: str) -> None:
+    """Exactness cross-check: the fused two-class count of an antecedent
+    must equal the count the discovery mine produced for the same itemset.
+    A mismatch means a kernel/engine exactness bug, not bad user input —
+    survives ``python -O``, unlike the bare assert it replaces."""
+    if fused_count != discovered_count:
+        raise RuntimeError(
+            f"minority_report_dense: fused C1 count {fused_count} for "
+            f"antecedent {itemset!r} != discovery count "
+            f"{discovered_count} (engine={engine}) — exactness violation")
+
+
 def minority_report_dense(
     transactions: Sequence[Sequence[Item]],
     classes: Sequence[int],
@@ -320,7 +333,7 @@ def minority_report_dense(
     rules: List[Rule] = []
     for itemset, row in zip(itemsets, counts):
         c0_, c1_ = int(row[0]), int(row[1])
-        assert c1_ == freq1[itemset]  # internal cross-check (exactness)
+        _crosscheck_fused(itemset, c1_, freq1[itemset], engine)
         conf = c1_ / (c1_ + c0_) if (c0_ + c1_) else 0.0
         if conf >= min_confidence:
             rules.append(Rule(itemset, target_class, c1_ / n_db, conf, c1_, c0_))

@@ -33,6 +33,8 @@ from __future__ import annotations
 
 from typing import Callable, Dict, Optional
 
+from .lockwatch import (LockOrderError, LockOrderWatcher, WatchedLock,
+                        instrument_server)
 from .metrics import (MetricsRegistry, counter_total, counter_value,
                       hist_get, hist_merge, hist_quantile, nearest_rank)
 from .tracing import Tracer
@@ -43,6 +45,8 @@ __all__ = [
     "kernel_efficiency", "telemetry_section", "register_section",
     "counter_total", "counter_value", "hist_get", "hist_merge",
     "hist_quantile", "nearest_rank", "MetricsRegistry", "Tracer",
+    "LockOrderError", "LockOrderWatcher", "WatchedLock",
+    "instrument_server",
 ]
 
 REGISTRY = MetricsRegistry(enabled=True)
@@ -142,7 +146,11 @@ def telemetry_section(snap: Optional[dict] = None) -> dict:
         try:
             out[name] = provider()
         except Exception as e:  # pragma: no cover - defensive
+            # section names come from register_section callers — a fixed,
+            # code-defined vocabulary, so the label set is bounded
             out[name] = {"error": f"{type(e).__name__}: {e}"}
+            REGISTRY.counter("telemetry_section_errors_total",
+                             section=name).inc()
     return out
 
 

@@ -154,6 +154,17 @@ _M_RESOLVE_TABLE = obs.REGISTRY.counter("autotune_resolutions_total",
                                         source="table")
 _M_TABLE_ERRORS = obs.REGISTRY.counter("autotune_table_errors_total")
 
+# last swallowed error per fallback site (device probe, serve-block probe):
+# surfaced through the telemetry section so a chronically failing probe is
+# visible in stats() instead of silently pinning the defaults
+LAST_FALLBACKS: Dict[str, str] = {}
+
+
+def _note_fallback(site: str, exc: BaseException) -> None:
+    """Account one swallowed fallback: bounded-label counter + context."""
+    LAST_FALLBACKS[site] = f"{type(exc).__name__}: {exc}"
+    obs.REGISTRY.counter("autotune_fallbacks_total", site=site).inc()
+
 
 # -- active-table state ------------------------------------------------------
 # pinned: an explicit set_active_table() call (tests pin None = defaults).
@@ -166,7 +177,8 @@ def device_kind() -> str:
     try:
         import jax
         kind = jax.devices()[0].device_kind
-    except Exception:
+    except Exception as e:
+        _note_fallback("device_kind", e)
         return "cpu"
     return re.sub(r"[^a-z0-9_.-]+", "_", str(kind).lower()).strip("_") or "cpu"
 
@@ -269,7 +281,8 @@ def resolve_serve_block_k(store) -> int:
         n = int(getattr(store, "base_rows", 0) or getattr(store, "n_rows", 0))
         w = int(store.vocab.n_words)
         c = int(store.n_classes)
-    except Exception:
+    except Exception as e:
+        _note_fallback("serve_block_k", e)
         return DEFAULT_BLOCK_K
     t = active_table()
     if t is None:
@@ -599,10 +612,11 @@ def _telemetry_section() -> dict:
     t = active_table()
     if t is None:
         return {"active": False, "source": "default", "entries": {},
-                "stale": {}}
+                "stale": {}, "fallbacks": dict(LAST_FALLBACKS)}
     return {
         "active": True,
         "source": t.source,
+        "fallbacks": dict(LAST_FALLBACKS),
         "device_kind": t.device_kind,
         "entries": {
             bucket: {"block_k": e.config.block_k, "block_n": e.config.block_n,

@@ -108,6 +108,7 @@ class AsyncFlusher:
         self._closed = False
         self.n_flushes = 0
         self.n_flush_errors = 0
+        self.last_flush_error: Optional[str] = None
         self.flushes_by_trigger = {"occupancy": 0, "deadline": 0,
                                    "manual": 0, "drain": 0}
         # _lat_lock guards the latency window: appends run inside _dispatch
@@ -175,7 +176,10 @@ class AsyncFlusher:
                     # background (or drain) flush: its result must not
                     # vanish — the next explicit flush() hands it back
                     self._unclaimed[ticket] = block
-        self._reason = None
+        # CountServer.flush calls _dispatch under the server lock (see the
+        # docstring): the lock IS held here, just not lexically visible
+        self._reason = None          # repro-lint: disable=CONC002
+        # repro-lint: disable=CONC002 -- caller holds the server lock
         self._oldest = (None if self._server.batcher.pending == 0
                         else time.monotonic())
 
@@ -196,12 +200,13 @@ class AsyncFlusher:
             self._reason = reason
             try:
                 self._server.flush()       # _dispatch runs inside
-            except Exception:
+            except Exception as e:
                 # requests were restored to the batcher (tickets stay
                 # pending); back off one deadline period before retrying —
                 # an occupancy trigger would otherwise busy-spin on a
                 # persistent failure
                 self.n_flush_errors += 1
+                self.last_flush_error = f"{type(e).__name__}: {e}"
                 _M_FLUSH_ERRORS.inc()
                 self._reason = None
                 now = time.monotonic()
@@ -283,6 +288,7 @@ class AsyncFlusher:
             "unclaimed_sync_tickets": len(self._unclaimed),
             "flushes": self.n_flushes,
             "flush_errors": self.n_flush_errors,
+            "last_flush_error": self.last_flush_error,
             "by_trigger": dict(self.flushes_by_trigger),
             "flush_latency_ms": {
                 "p50": pct(0.50), "p95": pct(0.95),

@@ -182,19 +182,33 @@ def check_cache_ledger(cache: BudgetedLRU, *,
     triggered by a miss (the get-miss-compute-put discipline both serving
     caches follow), ``misses - oversized_rejects == inserts + replacements``.
     A cache populated out-of-band (warmup pre-fill) breaks only this one.
+
+    Raises :class:`AssertionError` explicitly (not via ``assert``) so the
+    ledger check still fires under ``python -O``.
     """
     s = cache.stats()
-    assert s["size"] == len(cache._d)
-    assert s["inserts"] - s["evictions"] - s["purged"] == s["size"], s
+    _require(s["size"] == len(cache._d),
+             f"stats size {s['size']} != resident {len(cache._d)}", s)
+    _require(s["inserts"] - s["evictions"] - s["purged"] == s["size"],
+             "inserts - evictions - purged != size", s)
     recount = sum(cache._price(v) for v in cache._d.values())
-    assert s["bytes"] == recount == cache.nbytes, (s["bytes"], recount)
-    assert s["size"] <= s["capacity"], s
+    _require(s["bytes"] == recount == cache.nbytes,
+             f"byte ledger {s['bytes']} != recount {recount} "
+             f"(nbytes {cache.nbytes})", s)
+    _require(s["size"] <= s["capacity"], "size exceeds capacity", s)
     if cache.max_bytes is not None:
-        assert s["bytes"] <= cache.max_bytes, s
+        _require(s["bytes"] <= cache.max_bytes,
+                 "bytes exceed max_bytes budget", s)
     if miss_driven:
-        assert (s["misses"] - s["oversized_rejects"]
-                == s["inserts"] + s["replacements"]), s
+        _require(s["misses"] - s["oversized_rejects"]
+                 == s["inserts"] + s["replacements"],
+                 "misses - oversized_rejects != inserts + replacements", s)
     return s
+
+
+def _require(cond: bool, detail: str, stats: dict) -> None:
+    if not cond:
+        raise AssertionError(f"cache ledger violation: {detail} ({stats})")
 
 
 class CountCache(BudgetedLRU):

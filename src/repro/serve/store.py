@@ -107,6 +107,7 @@ class VersionedDB:
         self.n_appends = 0
         self.n_compactions = 0
         self.n_failed_compactions = 0
+        self.last_compaction_error: Optional[str] = None
         self._delta_bits: Optional[np.ndarray] = None   # (D, W) uint32, host
         self._delta_weights: Optional[np.ndarray] = None  # (D, C) int32
         self._delta_device = None   # (bits, weights) device mirror, lazy
@@ -210,6 +211,7 @@ class VersionedDB:
             "kernel_launches": self.kernel_launches,
             "appends": self.n_appends, "compactions": self.n_compactions,
             "failed_compactions": self.n_failed_compactions,
+            "last_compaction_error": self.last_compaction_error,
             "backend_choice": (None if self.backend_choice is None
                                else self.backend_choice.name),
         }
@@ -259,7 +261,7 @@ class VersionedDB:
         if self.delta_rows > self.merge_ratio * max(1, self.base_rows):
             try:
                 self.compact()
-            except Exception:
+            except Exception as e:
                 # compaction is a pure optimization and compact() is
                 # failure-safe (the new base is built BEFORE the delta
                 # drops), so the store still serves exact counts from
@@ -267,6 +269,7 @@ class VersionedDB:
                 # escaping compactor error would masquerade as a rejected
                 # append and invite a double-counting retry.
                 self.n_failed_compactions += 1
+                self.last_compaction_error = f"{type(e).__name__}: {e}"
                 _M_FAILED_COMPACTIONS.inc()
         _H_APPEND_MS.observe((time.perf_counter() - t0) * 1e3)
         return self.version

@@ -1,0 +1,32 @@
+"""Violation fixture for the concurrency checker (PARSED, never imported).
+
+CONC001: ``lock_ab`` and ``lock_ba`` acquire the two locks in opposite
+orders.  CONC002: ``racy_bump`` mutates ``shared``, which the thread target
+``_run`` also assigns, without holding any lock.
+"""
+import threading
+
+
+class BadOrdering:
+    def __init__(self):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+        self.shared = 0
+        threading.Thread(target=self._run, daemon=True).start()
+
+    def lock_ab(self):
+        with self._a_lock:
+            with self._b_lock:
+                return self.shared
+
+    def lock_ba(self):
+        with self._b_lock:
+            with self._a_lock:
+                return self.shared
+
+    def _run(self):
+        with self._a_lock:
+            self.shared += 1
+
+    def racy_bump(self):
+        self.shared += 1

@@ -1,0 +1,30 @@
+"""Clean twin of ``conc_bad.py``: one global lock order (A before B,
+everywhere), every mutation of the thread-shared attribute under the lock.
+"""
+import threading
+
+
+class GoodOrdering:
+    def __init__(self):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+        self.shared = 0
+        threading.Thread(target=self._run, daemon=True).start()
+
+    def lock_ab(self):
+        with self._a_lock:
+            with self._b_lock:
+                return self.shared
+
+    def lock_ab_again(self):
+        with self._a_lock:
+            with self._b_lock:
+                self.shared += 2
+
+    def _run(self):
+        with self._a_lock:
+            self.shared += 1
+
+    def safe_bump(self):
+        with self._a_lock:
+            self.shared += 1

@@ -1,0 +1,27 @@
+"""Violation fixture for the exception-hygiene checker (PARSED, never
+imported).
+
+EXC001 three ways: swallow without binding, bind without using, and
+preserve context without accounting.
+"""
+
+
+def swallow(fn):
+    try:
+        fn()
+    except Exception:
+        pass
+
+
+def bind_unused(fn, log):
+    try:
+        fn()
+    except Exception as e:
+        log.append("something went wrong")
+
+
+def no_accounting(fn, state):
+    try:
+        fn()
+    except Exception as e:
+        state["last"] = str(e)

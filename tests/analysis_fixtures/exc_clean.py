@@ -1,0 +1,25 @@
+"""Clean twin of ``exc_bad.py``: broad handlers re-raise, or preserve the
+exception AND account for it; typed handlers are out of scope entirely.
+"""
+
+
+def wrap_and_reraise(fn):
+    try:
+        fn()
+    except Exception as e:
+        raise RuntimeError("wrapped") from e
+
+
+def account_and_continue(fn, counter, state):
+    try:
+        fn()
+    except Exception as e:
+        state["last_error"] = f"{type(e).__name__}: {e}"
+        counter.inc()
+
+
+def typed_is_fine(fn):
+    try:
+        fn()
+    except (ValueError, OSError):
+        return None

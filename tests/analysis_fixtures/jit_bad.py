@@ -1,0 +1,18 @@
+"""Violation fixture for the jit-safety checker (PARSED, never imported).
+
+JIT001: ``float()`` and ``.item()`` on traced values; JIT002: Python ``if``
+on a traced value; JIT003: bare assert (with the checker scoped to cover
+this file); JIT004: ``np.asarray`` host transfer inside the jit scope.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def leaky(x, y):
+    assert x.ndim == 1
+    if x[0] > 0:
+        return float(y)
+    host = np.asarray(x)
+    return x.item() + host[0]

@@ -1,0 +1,17 @@
+"""Clean twin of ``jit_bad.py``: statics stay concrete (keyword-only +
+``static_argnames``), shapes are trace-time constants, branching happens
+in jnp, and the error path raises a typed exception on concrete values.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def well_behaved(x, y, *, scale, block: int = 8):
+    n, = x.shape
+    if n % block:
+        raise ValueError(f"rows {n} not a multiple of block {block}")
+    gated = jnp.where(x > 0, x * scale, x)
+    return gated + y

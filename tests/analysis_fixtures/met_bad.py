@@ -1,0 +1,19 @@
+"""Violation fixture for the metric-hygiene checker (PARSED, never
+imported).
+
+MET001: an f-string label, a ``str()`` label, and an f-string threaded
+through a local; MET002: one histogram name registered under two different
+bucket grids.
+"""
+
+
+def record(REGISTRY, n_rows, key):
+    REGISTRY.counter("serve_rows_total", rows=f"{n_rows}").inc()
+    REGISTRY.counter("serve_keys_total", key=str(key)).inc()
+    label = f"shape_{n_rows}"
+    REGISTRY.gauge("serve_shape", shape=label)
+
+
+def grids(REGISTRY):
+    REGISTRY.histogram("lat_ms", buckets=(1, 5, 10)).observe(2.0)
+    REGISTRY.histogram("lat_ms", buckets=(2, 4, 8)).observe(3.0)

@@ -1,0 +1,15 @@
+"""Clean twin of ``met_bad.py``: constant labels, bucketized geometry
+labels, a forwarded bounded-vocabulary name, one histogram grid per name.
+"""
+
+
+def record(REGISTRY, n, k, w, c, trigger, geometry_bucket):
+    geom = geometry_bucket(n, k, w, c)
+    REGISTRY.counter("kernel_launches_total", geometry=geom).inc()
+    REGISTRY.counter("serve_flushes_total", trigger=trigger).inc()
+    REGISTRY.counter("serve_appends_total", path="delta").inc()
+
+
+def grids(REGISTRY):
+    REGISTRY.histogram("lat_ms", buckets=(1, 5, 10)).observe(2.0)
+    REGISTRY.histogram("lat_ms", buckets=(1, 5, 10)).observe(3.0)

@@ -1,0 +1,14 @@
+"""Violation fixture for the tuner-seam checker (PARSED, never imported).
+
+TUNE001 three ways: a literal ``block_k``, a literal ``accum``, and a
+local constant threaded through a name.
+"""
+
+
+def launch_hardcoded(tx, tgt, w, itemset_counts):
+    return itemset_counts(tx, tgt, w, block_k=256, accum="mxu_f32")
+
+
+def launch_via_local(tx, tgt, w, acc, itemset_counts_into):
+    bk = 128
+    return itemset_counts_into(acc, tx, tgt, w, block_k=bk)

@@ -1,0 +1,17 @@
+"""Clean twin of ``tune_bad.py``: configs forwarded from parameters, taken
+from ``resolve_launch_config``, or left to resolve inside the entry point.
+"""
+
+
+def launch_resolved(tx, tgt, w, itemset_counts, resolve_launch_config):
+    cfg = resolve_launch_config(tx.shape[0], tgt.shape[0], tx.shape[1],
+                                w.shape[1])
+    return itemset_counts(tx, tgt, w, block_k=cfg.block_k, accum=cfg.accum)
+
+
+def launch_forwarded(tx, tgt, w, itemset_counts, block_k=None, accum=None):
+    return itemset_counts(tx, tgt, w, block_k=block_k, accum=accum)
+
+
+def launch_default(tx, tgt, w, itemset_counts):
+    return itemset_counts(tx, tgt, w)

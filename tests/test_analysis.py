@@ -1,0 +1,265 @@
+"""repro-lint battery: every checker against its violation/clean fixture
+pair, the suppression + fingerprint + baseline machinery, the whole-repo
+gate (the shipped tree must be clean modulo the committed baseline), the
+dead-module advisory, and the ``tools/analyze.py`` CLI self-test.
+
+The fixtures under ``tests/analysis_fixtures/`` are PARSED, never imported
+— they reference undefined helpers and fake registries on purpose.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (ConcurrencyChecker, ExceptionHygieneChecker,
+                            Finding, JitSafetyChecker, MetricHygieneChecker,
+                            TunerSeamChecker, analyze_paths, default_checkers,
+                            find_cycle, load_baseline, new_findings,
+                            write_baseline)
+from repro.analysis.deadmods import dead_module_report
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "analysis_fixtures"
+SRC = REPO / "src" / "repro"
+
+
+def _run(checker, *names):
+    """Run one fresh checker over fixture files; returns findings."""
+    paths = [str(FIXTURES / n) for n in names]
+    findings, n_files = analyze_paths(paths, [checker], root=str(FIXTURES))
+    assert n_files == len(names)
+    return findings
+
+
+def _codes(findings):
+    return sorted(f.code for f in findings)
+
+
+# -- per-checker fixture pairs ------------------------------------------------
+
+def test_concurrency_flags_inversion_and_unlocked_mutation():
+    findings = _run(ConcurrencyChecker(path_prefixes=("",)), "conc_bad.py")
+    codes = _codes(findings)
+    assert "CONC001" in codes, findings
+    assert "CONC002" in codes, findings
+    # the unlocked mutation is the one in racy_bump, not the guarded ones
+    conc2 = [f for f in findings if f.code == "CONC002"]
+    assert any("shared" in f.message for f in conc2)
+
+
+def test_concurrency_clean_twin_passes():
+    assert _run(ConcurrencyChecker(path_prefixes=("",)),
+                "conc_clean.py") == []
+
+
+def test_concurrency_lock_edges_exposed():
+    checker = ConcurrencyChecker(path_prefixes=("",))
+    _run(checker, "conc_bad.py")
+    adj = {}
+    for (a, b) in checker.lock_edges:
+        adj.setdefault(a, set()).add(b)
+    assert find_cycle(adj) is not None
+
+
+def test_jit_safety_flags_all_four_codes():
+    codes = set(_codes(_run(JitSafetyChecker(hot_prefixes=("",)),
+                            "jit_bad.py")))
+    assert {"JIT001", "JIT002", "JIT003", "JIT004"} <= codes
+
+
+def test_jit_safety_clean_twin_passes():
+    # statics via keyword-only/static_argnames, shape-derived branching,
+    # and a typed raise must all be allowed
+    assert _run(JitSafetyChecker(hot_prefixes=("",)), "jit_clean.py") == []
+
+
+def test_tuner_seam_flags_literals_and_local_constants():
+    findings = _run(TunerSeamChecker(), "tune_bad.py")
+    # one finding per hardcoded kwarg: block_k + accum in launch_hardcoded,
+    # the local-constant block_k in launch_via_local
+    assert _codes(findings) == ["TUNE001"] * 3
+    messages = " ".join(f.message for f in findings)
+    assert "block_k" in messages and "accum" in messages
+
+
+def test_tuner_seam_clean_twin_passes():
+    assert _run(TunerSeamChecker(), "tune_clean.py") == []
+
+
+def test_metric_hygiene_flags_unbounded_labels_and_grid_conflict():
+    findings = _run(MetricHygieneChecker(), "met_bad.py")
+    codes = _codes(findings)
+    assert codes.count("MET001") == 3, findings
+    assert codes.count("MET002") == 1, findings
+
+
+def test_metric_hygiene_clean_twin_passes():
+    # the geometry_bucket call is the sanctioned unbounded->bounded funnel
+    assert _run(MetricHygieneChecker(), "met_clean.py") == []
+
+
+def test_exception_hygiene_flags_each_swallow_variant():
+    findings = _run(ExceptionHygieneChecker(), "exc_bad.py")
+    assert _codes(findings) == ["EXC001"] * 3
+    reasons = [f.message for f in findings]
+    assert any("without binding" in r for r in reasons)
+    assert any("never uses" in r for r in reasons)
+    assert any("never accounts" in r for r in reasons)
+
+
+def test_exception_hygiene_clean_twin_passes():
+    assert _run(ExceptionHygieneChecker(), "exc_clean.py") == []
+
+
+# -- suppressions, fingerprints, baselines ------------------------------------
+
+_SWALLOW = ("def f(fn):\n"
+            "    try:\n"
+            "        fn()\n"
+            "    except Exception:{comment}\n"
+            "        pass\n")
+
+
+def _analyze_snippet(tmp_path, source, checker=None):
+    p = tmp_path / "snippet.py"
+    p.write_text(source)
+    findings, _ = analyze_paths([str(p)],
+                                [checker or ExceptionHygieneChecker()],
+                                root=str(tmp_path))
+    return findings
+
+
+def test_same_line_suppression(tmp_path):
+    noisy = _analyze_snippet(tmp_path, _SWALLOW.format(comment=""))
+    assert _codes(noisy) == ["EXC001"]
+    quiet = _analyze_snippet(
+        tmp_path,
+        _SWALLOW.format(comment="  # repro-lint: disable=EXC001 -- test"))
+    assert quiet == []
+
+
+def test_own_line_suppression_applies_to_next_line(tmp_path):
+    src = ("def f(fn):\n"
+           "    try:\n"
+           "        fn()\n"
+           "    # repro-lint: disable=EXC001 -- fixture\n"
+           "    except Exception:\n"
+           "        pass\n")
+    # the finding anchors at the `except` line, below the comment
+    assert _analyze_snippet(tmp_path, src) == []
+
+
+def test_file_level_suppression(tmp_path):
+    src = "# repro-lint: disable-file=EXC001\n" + _SWALLOW.format(comment="")
+    assert _analyze_snippet(tmp_path, src) == []
+    src_all = "# repro-lint: disable-file=all\n" + _SWALLOW.format(comment="")
+    assert _analyze_snippet(tmp_path, src_all) == []
+
+
+def test_unrelated_code_suppression_does_not_mask(tmp_path):
+    src = _SWALLOW.format(comment="  # repro-lint: disable=JIT003")
+    assert _codes(_analyze_snippet(tmp_path, src)) == ["EXC001"]
+
+
+def test_fingerprint_survives_line_shift(tmp_path):
+    before = _analyze_snippet(tmp_path, _SWALLOW.format(comment=""))
+    shifted = _analyze_snippet(
+        tmp_path, "\n\n\n# padding\n\n" + _SWALLOW.format(comment=""))
+    assert len(before) == len(shifted) == 1
+    assert before[0].line != shifted[0].line
+    assert before[0].fingerprint == shifted[0].fingerprint
+
+
+def test_baseline_roundtrip_and_diff(tmp_path):
+    findings = _analyze_snippet(tmp_path, _SWALLOW.format(comment=""))
+    bl = tmp_path / "baseline.json"
+    assert write_baseline(str(bl), findings) == 1
+    fps = load_baseline(str(bl))
+    assert new_findings(findings, fps) == []
+    other = Finding("elsewhere.py", 1, "EXC001", "m", "exception-hygiene",
+                    "except Exception:")
+    assert new_findings([other], fps) == [other]
+
+
+def test_baseline_schema_mismatch_rejected(tmp_path):
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"schema": 99, "fingerprints": []}))
+    with pytest.raises(ValueError, match="schema"):
+        load_baseline(str(bl))
+
+
+# -- whole-repo gate ----------------------------------------------------------
+
+def test_shipped_tree_is_clean_modulo_baseline():
+    """The exact gate CI runs: all five checkers over src/repro, no
+    findings beyond the committed baseline."""
+    findings, n_files = analyze_paths([str(SRC)], default_checkers(),
+                                      root=str(SRC))
+    assert n_files > 80
+    baseline = load_baseline(str(REPO / "tools" / "analysis_baseline.json"))
+    fresh = new_findings(findings, baseline)
+    assert fresh == [], "\n".join(f.format() for f in fresh)
+
+
+def test_static_lock_graph_is_acyclic_with_known_edges():
+    """The interprocedural lock graph over the serving+obs layers must be
+    exactly the two known nestings, and acyclic."""
+    checker = ConcurrencyChecker()
+    analyze_paths([str(SRC)], [checker], root=str(SRC))
+    edges = set(checker.lock_edges)
+    assert ("CountServer._lock", "AsyncFlusher._lat_lock") in edges
+    assert ("CountServer._lock", "MetricsRegistry._lock") in edges
+    adj = {}
+    for (a, b) in edges:
+        adj.setdefault(a, set()).add(b)
+    assert find_cycle(adj) is None, edges
+
+
+def test_dead_module_report_sanity():
+    report = dead_module_report(str(REPO))
+    reachable = set(report["reachable"])
+    assert "repro.serve.service" in reachable
+    assert "repro.mining.dense" in reachable
+    assert "repro.analysis.engine" in reachable
+    # the advisory must not claim any live layer is dead
+    for mod in report["dead"]:
+        assert not mod.startswith(("repro.serve", "repro.kernels",
+                                   "repro.mining", "repro.obs",
+                                   "repro.analysis")), report["dead"]
+
+
+# -- the CLI ------------------------------------------------------------------
+
+def _run_analyze(*args):
+    return subprocess.run(
+        [sys.executable, str(REPO / "tools" / "analyze.py"), *args],
+        capture_output=True, text=True, cwd=str(REPO))
+
+
+def test_cli_gate_passes_on_shipped_tree():
+    proc = _run_analyze()
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "repro-lint: ok" in proc.stdout
+
+
+def test_cli_self_test():
+    """Each checker must catch its injected violation and pass the clean
+    twin — the analyzer proving it still analyzes, perfgate-style."""
+    proc = _run_analyze("--self-test")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "self-test" in proc.stdout
+
+
+def test_cli_fails_on_injected_violation(tmp_path):
+    bad = tmp_path / "injected.py"
+    bad.write_text(_SWALLOW.format(comment=""))
+    proc = _run_analyze("--root", str(tmp_path))
+    assert proc.returncode == 1
+    assert "EXC001" in proc.stdout
+
+
+def test_cli_dead_modules_is_advisory():
+    proc = _run_analyze("--dead-modules")
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,90 @@
+"""``python -O`` regression battery for the converted assert sites.
+
+Bare asserts vanish under ``-O``; this PR converted the input-validation
+and exactness checks in the kernel oracle, the dense miner, and the cache
+ledger to typed exceptions precisely so they survive optimized runs.  One
+``-O`` subprocess exercises all three sites (amortizing the jax import)
+and emits per-site verdicts; the tests just read them.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+_PROBE = r"""
+import json
+
+verdicts = {"O_active": not __debug__}
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.itemset_count.ref import itemset_counts_ref
+try:
+    itemset_counts_ref(jnp.zeros((2, 2), jnp.uint32),
+                       jnp.zeros((1, 3), jnp.uint32),
+                       jnp.zeros((2, 1), jnp.int32))
+    verdicts["ref"] = "no-raise"
+except ValueError as e:
+    verdicts["ref"] = f"ValueError: {e}"
+except Exception as e:
+    verdicts["ref"] = type(e).__name__
+
+from repro.mining.dense import _crosscheck_fused
+try:
+    _crosscheck_fused((3,), 5, 6, "ref")
+    verdicts["dense"] = "no-raise"
+except RuntimeError as e:
+    verdicts["dense"] = f"RuntimeError: {e}"
+except Exception as e:
+    verdicts["dense"] = type(e).__name__
+
+from repro.serve.cache import CountCache, check_cache_ledger
+cache = CountCache(capacity=4)
+cache.put((1, 2), 0, np.zeros(3, np.int32))
+cache.inserts += 5          # corrupt the ledger on purpose
+try:
+    check_cache_ledger(cache)
+    verdicts["cache"] = "no-raise"
+except AssertionError as e:
+    verdicts["cache"] = f"AssertionError: {e}"
+except Exception as e:
+    verdicts["cache"] = type(e).__name__
+
+print(json.dumps(verdicts))
+"""
+
+
+@pytest.fixture(scope="module")
+def optimized_verdicts():
+    proc = subprocess.run(
+        [sys.executable, "-O", "-c", _PROBE],
+        capture_output=True, text=True, cwd=str(REPO),
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp", "JAX_PLATFORMS": "cpu"}, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    verdicts = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert verdicts["O_active"], "probe did not actually run under -O"
+    return verdicts
+
+
+def test_kernel_oracle_validation_survives_O(optimized_verdicts):
+    v = optimized_verdicts["ref"]
+    assert v.startswith("ValueError"), v
+    assert "word-width mismatch" in v
+
+
+def test_dense_crosscheck_survives_O(optimized_verdicts):
+    v = optimized_verdicts["dense"]
+    assert v.startswith("RuntimeError"), v
+    assert "exactness violation" in v
+
+
+def test_cache_ledger_check_survives_O(optimized_verdicts):
+    v = optimized_verdicts["cache"]
+    assert v.startswith("AssertionError"), v
+    assert "ledger violation" in v

@@ -470,7 +470,8 @@ def test_server_stats_expose_autotune_section():
         assert bucket in sec["stale"]
         sec_off = server.stats()["telemetry"]["autotune"]
         assert sec_off == {"active": False, "source": "default",
-                           "entries": {}, "stale": {}}
+                           "entries": {}, "stale": {},
+                           "fallbacks": dict(autotune.LAST_FALLBACKS)}
 
 
 def test_describe_active_banner():

@@ -11,6 +11,14 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "=== fast tier (pytest -m 'not slow') ==="
 python -m pytest -x -q -m "not slow"
 
+echo "=== static analysis (repro-lint: self-test, gate, dead modules) ==="
+# self-test first: an analyzer that cannot catch an injected violation
+# must not be allowed to greenlight the tree (perfgate --self-test rule)
+python tools/analyze.py --self-test
+python tools/analyze.py
+# advisory only — import-graph report, never fails the build
+python tools/analyze.py --dead-modules
+
 echo "=== full suite (--runslow) ==="
 python -m pytest -q --runslow
 
