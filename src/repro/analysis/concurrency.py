@@ -39,6 +39,10 @@ from .engine import Checker, Finding, Module, attr_chain, find_cycle
 DEFAULT_LOCK_ALIASES = {
     "self._server._lock": "CountServer._lock",   # AsyncFlusher -> its server
     "self.server._lock": "CountServer._lock",    # RuleServer -> its server
+    # the composed backend / background compactor acquire their store's lock
+    "self.store._store_lock": "VersionedDB._store_lock",
+    "self._store._store_lock": "VersionedDB._store_lock",
+    "store._store_lock": "VersionedDB._store_lock",   # store = self.store
 }
 
 # Method names that collide with builtin container/primitive methods: calls
@@ -49,8 +53,8 @@ _BUILTIN_METHODS = frozenset({
     "update", "extend", "remove", "insert", "discard", "sort", "reverse",
     "copy", "count", "index", "items", "keys", "values", "setdefault",
     "join", "split", "strip", "format", "encode", "decode", "read",
-    "write", "acquire", "release", "wait", "notify", "notify_all", "set",
-    "is_set", "put", "get_nowait", "start",
+    "write", "flush", "acquire", "release", "wait", "notify", "notify_all",
+    "set", "is_set", "put", "get_nowait", "start",
 })
 
 _LOCKISH_RE = ("lock", "mutex", "_mu")
@@ -97,7 +101,9 @@ class ConcurrencyChecker(Checker):
         "CONC002": "thread-shared attribute mutated outside a held lock",
     }
 
-    def __init__(self, path_prefixes: Sequence[str] = ("serve/", "obs/"),
+    def __init__(self,
+                 path_prefixes: Sequence[str] = ("serve/", "obs/",
+                                                 "mining/spill.py"),
                  aliases: Optional[Dict[str, str]] = None):
         self.path_prefixes = tuple(path_prefixes)
         self.aliases = dict(DEFAULT_LOCK_ALIASES if aliases is None

@@ -54,6 +54,16 @@ def main() -> None:
     ap.add_argument("--block-k", type=int, default=None,
                     help="serve K-pad block (default: per-device tuning "
                          "table, else 256)")
+    ap.add_argument("--spill-dir", default=None, metavar="DIR",
+                    help="disk-tier root: spill the base past the budget "
+                         "(default $REPRO_SPILL_DIR)")
+    ap.add_argument("--spill-threshold-bytes", type=int, default=None,
+                    help="host-RAM budget before the base spills to disk")
+    ap.add_argument("--bg-compact", action="store_true",
+                    help="fold deltas on a background compactor thread "
+                         "instead of inline in append()")
+    ap.add_argument("--min-compact-rows", type=int, default=None,
+                    help="auto-compaction floor (delta rows)")
     ap.add_argument("--streaming", action="store_true",
                     help="force the host-resident streaming backend")
     ap.add_argument("--chunk-rows", type=int, default=None)
@@ -117,6 +127,9 @@ def main() -> None:
         streaming=True if args.streaming else None,
         chunk_rows=args.chunk_rows, cache=not args.no_cache,
         cache_size=args.cache_size, block_k=args.block_k,
+        min_compact_rows=args.min_compact_rows, spill_dir=args.spill_dir,
+        spill_threshold_bytes=args.spill_threshold_bytes,
+        background_compaction=args.bg_compact,
         shards=args.shards, mesh=mesh, async_flush=args.async_flush,
         max_delay_ms=args.max_delay_ms, min_batch=args.min_batch)
     st = server.store

@@ -16,4 +16,6 @@ from .driver import mine_frequent as mine_frequent_backend
 from .gfp_backend import GFPBackend, gfp_mine_frequent, gfp_multitude_counts
 from .plan import (TISSchedule, build_schedule, canonical_itemsets,
                    choose_chunk_rows, live_items, stream_chunks)
+from .spill import (SpilledBackend, SpilledDB, default_spill_dir,
+                    spilled_counts)
 from .stream import (StreamingDB, streaming_counts, streaming_mine_frequent)

@@ -20,15 +20,19 @@ characteristics instead of a fixed size threshold.
 (decision order, first match wins; thresholds are keyword-tunable):
 
   1. ``distributed`` — a multi-device mesh was handed in: shard the sweep.
-  2. ``streaming``   — ``nbytes`` beyond the device-residency threshold:
+  2. ``spilled``     — ``nbytes`` beyond the HOST-RAM spill budget (only when
+                       the caller passes ``spill_threshold_bytes``, i.e. a
+                       disk tier is configured): mmap segment files + async
+                       prefetch (``mining/spill.py``).
+  3. ``streaming``   — ``nbytes`` beyond the device-residency threshold:
                        correctness of residency beats per-launch efficiency.
-  3. ``dense``       — tiny row counts: launch overhead dwarfs everything;
+  4. ``dense``       — tiny row counts: launch overhead dwarfs everything;
                        one resident sweep per level is unbeatable.
-  4. ``gfp``         — a deep mine (unbounded ``max_len`` or >= ``min_depth``)
+  5. ``gfp``         — a deep mine (unbounded ``max_len`` or >= ``min_depth``)
                        over a dense-and-compressible or heavily skewed DB:
                        the guided conditional walk replaces one whole-DB
                        launch per level with per-tree-item blocks.
-  5. ``dense``       — otherwise: shallow mines and sparse uniform data keep
+  6. ``dense``       — otherwise: shallow mines and sparse uniform data keep
                        the level-wise sweep.
 
 Every engine is exact, so the chooser is a pure performance policy — the
@@ -153,6 +157,7 @@ def choose_backend(
     mesh=None,
     max_len: int = 0,
     stream_threshold_bytes: Optional[int] = None,
+    spill_threshold_bytes: Optional[int] = None,
     tiny_rows: Optional[int] = None,
     dense_density: float = DEFAULT_DENSE_DENSITY,
     dedup_ratio: float = DEFAULT_DEDUP_RATIO,
@@ -164,7 +169,8 @@ def choose_backend(
     points produced it — is recorded through :func:`_record_choice`."""
     return _record_choice(_choose_backend(
         traits, mesh=mesh, max_len=max_len,
-        stream_threshold_bytes=stream_threshold_bytes, tiny_rows=tiny_rows,
+        stream_threshold_bytes=stream_threshold_bytes,
+        spill_threshold_bytes=spill_threshold_bytes, tiny_rows=tiny_rows,
         dense_density=dense_density, dedup_ratio=dedup_ratio, skew=skew,
         min_depth=min_depth))
 
@@ -175,6 +181,7 @@ def _choose_backend(
     mesh=None,
     max_len: int = 0,
     stream_threshold_bytes: Optional[int] = None,
+    spill_threshold_bytes: Optional[int] = None,
     tiny_rows: Optional[int] = None,
     dense_density: float = DEFAULT_DENSE_DENSITY,
     dedup_ratio: float = DEFAULT_DEDUP_RATIO,
@@ -188,6 +195,16 @@ def _choose_backend(
             "distributed",
             f"multi-device mesh ({getattr(mesh, 'size', 0)} devices): "
             "shard the sweep", traits)
+    # spill_threshold_bytes is opt-in (None = no disk tier configured): past
+    # the host-RAM budget the rows cannot stay resident ANYWHERE, so disk
+    # wins before the device-residency question is even asked
+    if spill_threshold_bytes is not None and \
+            traits.nbytes > int(spill_threshold_bytes):
+        return BackendChoice(
+            "spilled",
+            f"{traits.nbytes} bytes exceeds the {int(spill_threshold_bytes)}"
+            "-byte host-RAM spill budget: mmap disk segments + async "
+            "prefetch", traits)
     if traits.nbytes > stream_threshold_bytes:
         return BackendChoice(
             "streaming",
@@ -239,6 +256,15 @@ def backend_for_db(db, *, mesh=None, max_len: int = 0, use_kernel: bool = True,
         miner = DistributedMiner(mesh, use_kernel=use_kernel)
         return miner.backend(np.asarray(db.bits), np.asarray(db.weights),
                              db.vocab), choice
+    if choice.name == "spilled":
+        from .spill import SpilledBackend, SpilledDB, default_spill_dir
+        if isinstance(db, SpilledDB):
+            sdb = db
+        else:
+            sdb = SpilledDB.spill(db.vocab, np.asarray(db.bits),
+                                  np.asarray(db.weights), int(db.n_rows),
+                                  int(db.n_classes), default_spill_dir())
+        return SpilledBackend(sdb, use_kernel=use_kernel), choice
     if choice.name == "streaming":
         from .backend import StreamingBackend
         from .stream import StreamingDB

@@ -89,16 +89,24 @@ def choose_chunk_rows(n_words: int, n_classes: int, *,
     When the caller knows the total row count (``n_rows``), the active tuning
     table gets first say: a sweep-measured ``chunk_rows`` for this geometry
     bucket overrides the staging-budget heuristic (aligned to the kernel's
-    N-block so chunk boundaries never add padding work)."""
+    N-block so chunk boundaries never add padding work).
+
+    Either source is CLAMPED to the align-rounded row count: a tuned entry
+    measured on a bigger bucket must not hand a 2k-row DB a 16384-row chunk
+    shape — the sweep would zero-pad the single ragged chunk up to the full
+    chunk and burn 8x the kernel work on rows that count nothing."""
+    cap = None
     if n_rows is not None and n_rows > 0:
+        cap = max(align, -(-int(n_rows) // align) * align)
         from ..roofline import autotune
         tuned = autotune.resolve_launch_config(
             n_rows, autotune.DEFAULT_BLOCK_K, n_words, n_classes).chunk_rows
         if tuned is not None and tuned > 0:
-            return max(align, (int(tuned) // align) * align)
+            return min(cap, max(align, (int(tuned) // align) * align))
     row_bytes = 4 * (max(1, n_words) + max(1, n_classes))
     rows = budget_bytes // row_bytes
-    return max(align, (rows // align) * align)
+    rows = max(align, (rows // align) * align)
+    return rows if cap is None else min(cap, rows)
 
 
 def stream_chunks(n_rows: int, chunk_rows: int) -> List[Tuple[int, int]]:

@@ -1,0 +1,498 @@
+"""Disk-tier chunk store: spill the encoded bitmap to mmap'd segment files.
+
+``StreamingDB`` broke the DEVICE memory ceiling but still keeps every chunk
+in host RAM, so real N is bounded by the host.  This module extends the same
+chunked-sweep discipline one tier down, the way "Mining Frequent Itemsets
+from Secondary Memory" (Grahne & Zhu, 2004) partitions the database on disk
+and overlaps IO with computation:
+
+  * ``SpilledDB`` persists the (U, W) bitmap + (U, C) class weights as
+    per-chunk ``.npy`` SEGMENT files under one directory, described by a
+    ``MANIFEST.json`` written last (tmp + ``os.replace``, the repo's atomic
+    checkpoint discipline) — a crashed spill leaves either the previous
+    manifest or none, never a torn store.  ``SpilledDB.open(directory)``
+    reopens the store after a process death: the segments ARE the durable
+    chunk grid, so a killed mine resumes from disk (pair with a
+    ``MiningCheckpoint`` for the level/chunk cursor).
+  * ``spilled_counts`` sweeps the segments through the same Pallas kernel as
+    ``streaming_counts`` — counts are int32 sums, so the sweep is
+    bit-identical to the all-RAM streaming sweep and to one dense pass — with
+    an ASYNC PREFETCH thread that reads segment i+1 from disk (mmap), pads
+    it, and ``jax.device_put``s it while the kernel counts segment i.  The
+    host-RAM high-water mark stays at ~2 segments regardless of total N
+    (the queue holds at most ``depth`` decoded segments).
+  * ``SpilledBackend`` adapts the store to the ``CountBackend`` protocol so
+    the unified mining driver checkpoints per SEGMENT — the chunk files are
+    the natural checkpoint unit.
+
+Reads go through ``np.load(mmap_mode="r")``: the OS page cache, not the
+process heap, holds the bytes, and a re-read after restart touches only the
+pages the sweep actually walks.
+
+Telemetry (PR 7 obs layer): ``spill_bytes_written_total`` /
+``spill_bytes_read_total`` / ``spill_segments_written_total`` counters, the
+``spill_prefetch_hits_total`` / ``spill_prefetch_misses_total`` pair (a hit
+means the next segment was already decoded + device-put when the consumer
+asked — the overlap worked), and a ``spill_prefetch_hit_ratio`` gauge per
+sweep.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.itemset_count import itemset_counts_into
+from ..obs import REGISTRY, TRACER
+from .encode import ItemVocab
+from .plan import choose_chunk_rows, stream_chunks
+from .stream import _pad_rows
+
+Item = Hashable
+
+MANIFEST_NAME = "MANIFEST.json"
+_FORMAT = "repro-spill-v1"
+
+# Host-RAM budget past which VersionedDB residency selection (and the
+# chooser, when a spill directory is configured) moves the base to disk.
+DEFAULT_SPILL_THRESHOLD_BYTES = int(
+    os.environ.get("REPRO_SPILL_THRESHOLD_BYTES", 2 << 30))
+
+# How many decoded+device-put segments the prefetcher may run ahead — 2
+# mirrors the double-buffered H2D overlap of the in-RAM streaming sweep.
+PREFETCH_DEPTH = 2
+
+_M_SEGS_WRITTEN = REGISTRY.counter("spill_segments_written_total")
+_M_BYTES_WRITTEN = REGISTRY.counter("spill_bytes_written_total")
+_M_BYTES_READ = REGISTRY.counter("spill_bytes_read_total")
+_M_PREFETCH_HITS = REGISTRY.counter("spill_prefetch_hits_total")
+_M_PREFETCH_MISSES = REGISTRY.counter("spill_prefetch_misses_total")
+_M_PREFETCH_ERRORS = REGISTRY.counter("spill_prefetch_errors_total")
+
+
+def default_spill_dir() -> str:
+    """The spill root when none was configured: ``$REPRO_SPILL_DIR`` or a
+    per-process tmp directory (callers own cleanup of explicit dirs)."""
+    root = os.environ.get("REPRO_SPILL_DIR")
+    if root:
+        return root
+    import tempfile
+    return tempfile.mkdtemp(prefix="repro-spill-")
+
+
+def _atomic_save(path: str, arr: np.ndarray) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.save(f, arr)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _check_items_jsonable(items: Sequence[Item]) -> list:
+    """The manifest persists the vocab; items must survive a JSON
+    round-trip IDENTICALLY or a reopened store would mis-key every mask."""
+    as_list = list(items)
+    try:
+        back = json.loads(json.dumps(as_list))
+    except TypeError as e:
+        raise TypeError(
+            f"vocab items must be JSON-serializable to spill to disk: {e}"
+        ) from e
+    if back != as_list:
+        raise TypeError(
+            "vocab items do not round-trip through JSON (e.g. tuples become "
+            "lists); re-key the items as strings/ints before spilling")
+    return as_list
+
+
+@dataclass
+class SpilledDB:
+    """Encoded, deduped, class-weighted DB persisted as on-disk segments.
+
+    Mirrors ``StreamingDB`` (same encode discipline, same chunk grid for a
+    given ``chunk_rows``) but the rows live in ``.npy`` segment files under
+    ``directory`` and every sweep goes through ``spilled_counts``.  The
+    ``bits`` / ``weights`` properties MATERIALIZE the full arrays (used by
+    compaction and ``GFPBackend.from_store``); steady-state counting never
+    does.
+    """
+    vocab: ItemVocab
+    directory: str
+    n_rows: int              # original logical N (sum of weights)
+    n_classes: int
+    chunk_rows: int
+    seg_rows: Tuple[int, ...] = field(default_factory=tuple)
+    n_words: int = 1
+
+    # -- shape facts (no disk IO) ---------------------------------------------
+    @property
+    def n_unique(self) -> int:
+        return int(sum(self.seg_rows))
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.seg_rows)
+
+    @property
+    def nbytes(self) -> int:
+        """Logical encoded footprint (what the rows would occupy in RAM)."""
+        return 4 * (self.n_words + self.n_classes) * self.n_unique
+
+    def _seg_paths(self, j: int) -> Tuple[str, str]:
+        return (os.path.join(self.directory, f"seg{j:05d}.bits.npy"),
+                os.path.join(self.directory, f"seg{j:05d}.w.npy"))
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def spill(cls, vocab: ItemVocab, bits: np.ndarray, weights: np.ndarray,
+              n_rows: int, n_classes: int, directory: str,
+              chunk_rows: Optional[int] = None) -> "SpilledDB":
+        """Write already-encoded/deduped host arrays as segment files.
+
+        Segments first, ``MANIFEST.json`` last — each via tmp +
+        ``os.replace`` — so a crash mid-spill never leaves an openable but
+        torn store.  Raises ``OverflowError`` if per-class totals exceed
+        int32 (the same accumulator guard as the streaming sweep, checked
+        once here instead of re-reading every segment per sweep)."""
+        bits = np.ascontiguousarray(np.asarray(bits, np.uint32))
+        weights = np.ascontiguousarray(np.asarray(weights, np.int32))
+        if weights.ndim == 1:
+            weights = weights[:, None]
+        u, n_words = bits.shape
+        totals = weights.sum(axis=0, dtype=np.int64)
+        if np.any(totals > np.iinfo(np.int32).max):
+            raise OverflowError(
+                "per-class weight totals exceed int32; spilled counts could "
+                "wrap — split the DB or widen the accumulator")
+        if chunk_rows is None:
+            chunk_rows = choose_chunk_rows(n_words, n_classes, n_rows=u)
+        items = _check_items_jsonable(vocab.items)
+        os.makedirs(directory, exist_ok=True)
+        chunks = stream_chunks(u, chunk_rows)
+        db = cls(vocab=vocab, directory=directory, n_rows=int(n_rows),
+                 n_classes=int(n_classes), chunk_rows=int(chunk_rows),
+                 seg_rows=tuple(e - s for s, e in chunks),
+                 n_words=int(n_words))
+        with TRACER.span("spill.write", {"segments": len(chunks),
+                                         "rows": u}):
+            for j, (s, e) in enumerate(chunks):
+                bp, wp = db._seg_paths(j)
+                _atomic_save(bp, bits[s:e])
+                _atomic_save(wp, weights[s:e])
+                _M_SEGS_WRITTEN.inc()
+                _M_BYTES_WRITTEN.inc(bits[s:e].nbytes + weights[s:e].nbytes)
+            manifest = {
+                "format": _FORMAT,
+                "n_rows": int(n_rows), "n_classes": int(n_classes),
+                "chunk_rows": int(chunk_rows), "n_words": int(n_words),
+                "seg_rows": [int(r) for r in db.seg_rows],
+                "items": items,
+                "class_totals": [int(t) for t in totals],
+            }
+            tmp = os.path.join(directory, MANIFEST_NAME + ".tmp")
+            with open(tmp, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, os.path.join(directory, MANIFEST_NAME))
+        return db
+
+    @classmethod
+    def from_streaming(cls, db, directory: str,
+                       chunk_rows: Optional[int] = None) -> "SpilledDB":
+        """Spill a ``StreamingDB`` (or any DB exposing host
+        bits/weights/vocab/n_rows/n_classes) keeping its chunk grid."""
+        return cls.spill(db.vocab, np.asarray(db.bits),
+                         np.asarray(db.weights), int(db.n_rows),
+                         int(db.n_classes), directory,
+                         chunk_rows=chunk_rows if chunk_rows is not None
+                         else getattr(db, "chunk_rows", None))
+
+    @classmethod
+    def open(cls, directory: str) -> "SpilledDB":
+        """Reopen a spilled store from its manifest (the kill/resume seam).
+
+        Validates format and that every listed segment file exists with the
+        advertised row count — a torn or truncated store must fail loudly
+        here, not miscount later."""
+        path = os.path.join(directory, MANIFEST_NAME)
+        with open(path) as f:
+            m = json.load(f)
+        if m.get("format") != _FORMAT:
+            raise ValueError(
+                f"{path}: unknown spill format {m.get('format')!r} "
+                f"(expected {_FORMAT!r})")
+        db = cls(vocab=ItemVocab(tuple(m["items"])), directory=directory,
+                 n_rows=int(m["n_rows"]), n_classes=int(m["n_classes"]),
+                 chunk_rows=int(m["chunk_rows"]),
+                 seg_rows=tuple(int(r) for r in m["seg_rows"]),
+                 n_words=int(m["n_words"]))
+        for j, rows in enumerate(db.seg_rows):
+            bp, wp = db._seg_paths(j)
+            for p in (bp, wp):
+                if not os.path.exists(p):
+                    raise FileNotFoundError(
+                        f"spilled store at {directory} is torn: manifest "
+                        f"lists {p} but the file is missing")
+            got = np.load(bp, mmap_mode="r").shape[0]
+            if got != rows:
+                raise ValueError(
+                    f"{bp}: manifest says {rows} rows, file has {got}")
+        return db
+
+    # -- IO -------------------------------------------------------------------
+    def segment(self, j: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Memory-mapped (rows_j, W) bits + (rows_j, C) weights of segment j
+        — pages fault in lazily as the sweep (or prefetcher) walks them."""
+        bp, wp = self._seg_paths(j)
+        return np.load(bp, mmap_mode="r"), np.load(wp, mmap_mode="r")
+
+    @property
+    def bits(self) -> np.ndarray:
+        """Full (U, W) bitmap, MATERIALIZED from disk.  Compaction-path only;
+        counting sweeps stream segments instead."""
+        if not self.seg_rows:
+            return np.zeros((0, self.n_words), np.uint32)
+        return np.concatenate([np.asarray(self.segment(j)[0])
+                               for j in range(self.n_chunks)])
+
+    @property
+    def weights(self) -> np.ndarray:
+        """Full (U, C) weights, MATERIALIZED from disk (see ``bits``)."""
+        if not self.seg_rows:
+            return np.zeros((0, self.n_classes), np.int32)
+        return np.concatenate([np.asarray(self.segment(j)[1])
+                               for j in range(self.n_chunks)])
+
+    def head(self, rows: int) -> Tuple[np.ndarray, np.ndarray]:
+        """First ``min(rows, seg0)`` rows as host arrays — the trait-sampling
+        hook, so the chooser never materializes the whole store."""
+        if not self.seg_rows:
+            return (np.zeros((0, self.n_words), np.uint32),
+                    np.zeros((0, self.n_classes), np.int32))
+        b, w = self.segment(0)
+        take = min(int(rows), b.shape[0])
+        return np.asarray(b[:take]), np.asarray(w[:take])
+
+    def delete(self) -> None:
+        """Remove the segment directory (a replaced spilled base is dead
+        weight on disk the moment its successor's manifest lands)."""
+        shutil.rmtree(self.directory, ignore_errors=True)
+
+    def counts(self, tgt_bits, **kwargs) -> jnp.ndarray:
+        return spilled_counts(self, tgt_bits, **kwargs)
+
+
+def _load_segment(db: SpilledDB, j: int, pad_to: int):
+    """Read segment j from disk, zero-pad to the fixed chunk shape, and
+    enqueue the H2D copy.  Runs on the prefetch thread during overlapped
+    sweeps; the same code serves the synchronous fallback."""
+    bits, w = db.segment(j)
+    _M_BYTES_READ.inc(bits.nbytes + w.nbytes)
+    return jax.device_put((_pad_rows(np.asarray(bits), pad_to),
+                           _pad_rows(np.asarray(w), pad_to)))
+
+
+class _SegmentPrefetcher:
+    """Background reader: decodes + ``device_put``s up to ``depth`` segments
+    ahead of the consuming sweep.
+
+    All cross-thread state flows through one bounded ``queue.Queue`` (items
+    ``("ok", j, bufs)`` / ``("err", exc)``) plus a stop ``Event`` — the
+    thread assigns no shared attributes, so there is nothing for a lock to
+    guard.  ``get(j)`` counts a prefetch HIT when the segment was already
+    decoded and queued at request time (the disk read truly overlapped the
+    previous segment's kernel work) and a MISS when the consumer had to
+    wait."""
+
+    def __init__(self, db: SpilledDB, order: Sequence[int], pad_to: int,
+                 depth: int = PREFETCH_DEPTH):
+        self.hits = 0
+        self.misses = 0
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, args=(db, list(order), pad_to),
+            name="spill-prefetch", daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _run(self, db: SpilledDB, order: List[int], pad_to: int) -> None:
+        try:
+            for j in order:
+                if self._stop.is_set():
+                    return
+                if not self._put(("ok", j, _load_segment(db, j, pad_to))):
+                    return
+        except BaseException as e:   # surface on the consumer, never lost
+            _M_PREFETCH_ERRORS.inc()
+            self._put(("err", e))
+
+    def get(self, j: int):
+        """The consumer's handoff for segment ``j`` (segments are consumed
+        strictly in the order the prefetcher was given)."""
+        if not self._q.empty():
+            self.hits += 1
+            _M_PREFETCH_HITS.inc()
+        else:
+            self.misses += 1
+            _M_PREFETCH_MISSES.inc()
+        kind, *rest = self._q.get()
+        if kind == "err":
+            raise rest[0]
+        got_j, bufs = rest
+        if got_j != j:
+            raise RuntimeError(
+                f"prefetch order diverged: wanted segment {j}, got {got_j}")
+        return bufs
+
+    def shutdown(self) -> None:
+        # named shutdown (not close): "close" would collide with the serving
+        # layer's lock-holding close() methods in repro-lint's name-resolved
+        # call graph and manufacture a phantom lock-order edge
+        self._stop.set()
+        # unblock a producer stuck in put(): drain whatever is queued
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=10)
+
+
+def spilled_counts(
+    db: SpilledDB,
+    tgt_bits,                     # (K, W) uint32
+    *,
+    use_kernel: bool = True,
+    accum: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    block_k: Optional[int] = None,
+    block_n: Optional[int] = None,
+    init: Optional[np.ndarray] = None,     # (K, C) resume accumulator
+    start_chunk: int = 0,
+    on_chunk: Optional[Callable[[int, jnp.ndarray], None]] = None,
+    prefetch: bool = True,
+    chunk_rows: Optional[int] = None,      # accepted for StreamingDB parity
+) -> jnp.ndarray:                 # (K, C) int32
+    """Disk-tier chunked sweep; bit-identical to the all-RAM streaming sweep.
+
+    Same resume contract as ``streaming_counts`` (``init`` / ``start_chunk``
+    / ``on_chunk``), with segment files as the chunk grid.  With
+    ``prefetch=True`` a background thread reads + ``device_put``s segment
+    i+1 while the kernel counts segment i; ``prefetch=False`` is the
+    synchronous ablation (the benchmark's baseline).  ``chunk_rows`` is
+    accepted for call-site parity with ``StreamingDB.counts`` but must match
+    the on-disk grid — segments are immutable once spilled."""
+    if chunk_rows is not None and int(chunk_rows) != db.chunk_rows:
+        raise ValueError(
+            f"spilled segments are fixed at chunk_rows={db.chunk_rows}; "
+            f"re-spill to change the grid (got {chunk_rows})")
+    tgt = np.asarray(tgt_bits)
+    k, c = int(tgt.shape[0]), db.n_classes
+    if k == 0:
+        return jnp.zeros((0, c), jnp.int32)
+    acc = (jnp.zeros((k, c), jnp.int32) if init is None
+           else jnp.asarray(np.asarray(init), jnp.int32))
+    nseg = db.n_chunks
+    if db.n_unique == 0 or start_chunk >= nseg:
+        return acc
+    tgt_d = jax.device_put(jnp.asarray(tgt))
+    # fixed chunk shape, ragged tail zero-padded — one compiled executable,
+    # single-segment stores launch their exact row count (no padding waste)
+    pad_to = db.chunk_rows if nseg > 1 else db.seg_rows[0]
+    order = range(start_chunk, nseg)
+    fetcher = (_SegmentPrefetcher(db, order, pad_to) if prefetch and
+               nseg - start_chunk > 1 else None)
+    try:
+        with TRACER.span("spill.sweep", {"segments": nseg - start_chunk,
+                                         "k": k, "prefetch": bool(fetcher)}):
+            for j in order:
+                cur_tx, cur_w = (fetcher.get(j) if fetcher is not None
+                                 else _load_segment(db, j, pad_to))
+                acc = itemset_counts_into(
+                    acc, cur_tx, tgt_d, cur_w, block_k=block_k,
+                    block_n=block_n, interpret=interpret,
+                    use_kernel=use_kernel, accum=accum)
+                if on_chunk is not None:
+                    on_chunk(j, acc)
+    finally:
+        if fetcher is not None:
+            fetcher.shutdown()
+            total = fetcher.hits + fetcher.misses
+            if total:
+                REGISTRY.set_gauge("spill_prefetch_hit_ratio",
+                                   fetcher.hits / total)
+    return acc
+
+
+class SpilledBackend:
+    """:class:`~repro.mining.backend.CountBackend` over a :class:`SpilledDB`
+    — segment files are the checkpoint unit, so a mine killed mid-level
+    resumes from the last durable segment after ``SpilledDB.open``."""
+
+    def __init__(self, db: SpilledDB, *, use_kernel: bool = True,
+                 accum: Optional[str] = None, prefetch: bool = True):
+        self.db = db
+        self.use_kernel = use_kernel
+        self.accum = accum
+        self.prefetch = prefetch
+        self.vocab = db.vocab
+        self.n_rows = db.n_rows
+        self.n_classes = db.n_classes
+
+    @property
+    def nbytes(self) -> int:
+        return self.db.nbytes
+
+    @property
+    def n_count_chunks(self) -> int:
+        return self.db.n_chunks
+
+    def chunk_signature(self) -> dict:
+        return {"backend": "spilled", "chunk_rows": self.db.chunk_rows,
+                "n_rows": self.db.n_unique}
+
+    def mine_signature(self) -> dict:
+        return {}
+
+    def item_counts(self):
+        return None
+
+    def traits(self):
+        """Sampled traits (head segment) with the TRUE on-disk footprint —
+        the chooser must see the full nbytes, not the sample's."""
+        from dataclasses import replace as _dc_replace
+
+        from .chooser import TRAIT_SAMPLE_ROWS, DatasetTraits
+        bits, w = self.db.head(TRAIT_SAMPLE_ROWS)
+        t = DatasetTraits.measure(bits, w, self.vocab, self.n_rows)
+        return _dc_replace(t, nbytes=self.db.nbytes,
+                           n_unique=self.db.n_unique,
+                           dedup_ratio=(self.db.n_unique / self.n_rows
+                                        if self.n_rows else 1.0))
+
+    def counts(self, masks, *, start_chunk: int = 0,
+               init: Optional[np.ndarray] = None, on_chunk=None):
+        rows = spilled_counts(
+            self.db, masks, use_kernel=self.use_kernel, accum=self.accum,
+            start_chunk=start_chunk, init=init, on_chunk=on_chunk,
+            prefetch=self.prefetch)
+        return np.asarray(rows)

@@ -168,7 +168,9 @@ def instrument_server(server, watcher: Optional[LockOrderWatcher] = None,
     """Wrap a :class:`~repro.serve.service.CountServer`'s serving locks
     (and optionally a metrics registry's) under one watcher.  Call BEFORE
     submitting traffic.  Sync servers (``async_flush=False``) hold a
-    nullcontext instead of a lock and are left alone."""
+    nullcontext instead of a lock and are left alone.  The store's lock and
+    its background compactor's (when present) are wrapped too — the disk
+    tier added real cross-thread traffic on both."""
     w = watcher if watcher is not None else LockOrderWatcher()
     if hasattr(server._lock, "acquire"):
         server._lock = w.wrap(server._lock, "CountServer._lock")
@@ -176,6 +178,12 @@ def instrument_server(server, watcher: Optional[LockOrderWatcher] = None,
     if flusher is not None:
         flusher._lat_lock = w.wrap(flusher._lat_lock,
                                    "AsyncFlusher._lat_lock")
+    store_lock = getattr(server.store, "_store_lock", None)
+    if store_lock is not None:
+        server.store._store_lock = w.wrap(store_lock, "VersionedDB._store_lock")
+    compactor = getattr(server.store, "_compactor", None)
+    if compactor is not None:
+        compactor._mu = w.wrap(compactor._mu, "AsyncCompactor._mu")
     if registry is not None:
         registry._lock = w.wrap(registry._lock, "MetricsRegistry._lock")
     return w

@@ -7,6 +7,7 @@
 # serving (RuleServer: confidence from the per-class count rows, rule cache
 # keyed on (antecedent, version, min_conf), version prefetch on append).
 from .async_loop import AsyncFlusher, CountFuture
+from .compactor import AsyncCompactor
 from .batcher import (BatchPlan, MicroBatcher, QueryRequest, build_masks,
                       canonical_itemset)
 from .cache import CountCache
@@ -17,7 +18,8 @@ from .shard import ShardedCountBackend, ShardedDB
 from .store import VersionedCountBackend, VersionedDB, check_class_labels
 
 __all__ = [
-    "AsyncFlusher", "BatchPlan", "CountFuture", "MicroBatcher",
+    "AsyncCompactor", "AsyncFlusher", "BatchPlan", "CountFuture",
+    "MicroBatcher",
     "QueryRequest", "build_masks", "canonical_itemset", "CountCache",
     "CountServer", "MiningRefreshError", "versioned_mine_frequent",
     "RuleCache", "RuleServer", "ShardedCountBackend", "ShardedDB",

@@ -121,6 +121,10 @@ class CountServer:
         cache: bool = True,
         block_k: Optional[int] = None,
         merge_ratio: float = 0.25,
+        min_compact_rows: Optional[int] = None,
+        spill_dir: Optional[str] = None,
+        spill_threshold_bytes: Optional[int] = None,
+        background_compaction: bool = False,
         shards: Optional[int] = None,
         mesh=None,
         async_flush: bool = False,
@@ -128,18 +132,26 @@ class CountServer:
         min_batch: int = 8,
     ):
         if shards is not None:
+            if spill_dir is not None or spill_threshold_bytes is not None:
+                # shards ARE the residency decision: rows too big for one
+                # device get partitioned, not spilled per-shard
+                raise ValueError("spill_dir/spill_threshold_bytes require "
+                                 "an unsharded store (shards=None)")
             self.store: Union[VersionedDB, ShardedDB] = ShardedDB(
                 transactions, classes=classes, n_classes=n_classes,
                 n_shards=shards, mesh=mesh, use_kernel=use_kernel,
                 streaming=streaming, chunk_rows=chunk_rows,
-                merge_ratio=merge_ratio)
+                merge_ratio=merge_ratio, min_compact_rows=min_compact_rows)
         elif mesh is not None:
             raise ValueError("mesh= requires shards=")
         else:
             self.store = VersionedDB(
                 transactions, classes=classes, n_classes=n_classes,
                 use_kernel=use_kernel, streaming=streaming,
-                chunk_rows=chunk_rows, merge_ratio=merge_ratio)
+                chunk_rows=chunk_rows, merge_ratio=merge_ratio,
+                min_compact_rows=min_compact_rows, spill_dir=spill_dir,
+                spill_threshold_bytes=spill_threshold_bytes,
+                background_compaction=background_compaction)
         if block_k is None:
             # tune the serve pad size to the resident geometry: the table is
             # keyed on the bucket the store's sweeps will actually launch
@@ -184,6 +196,9 @@ class CountServer:
         ticket.  The server stays usable synchronously afterwards."""
         if self._flusher is not None:
             self._flusher.close()
+        closer = getattr(self.store, "close", None)
+        if closer is not None:
+            closer()   # drain + stop the store's background compactor
 
     def __enter__(self) -> "CountServer":
         return self
@@ -355,20 +370,20 @@ class CountServer:
                 "store", "explicitly requested: composed base+delta sweep")
         if which == "auto":
             choice = choose_backend(composed.traits())
-        elif which in ("dense", "streaming", "gfp", "distributed"):
+        elif which in ("dense", "streaming", "spilled", "gfp", "distributed"):
             choice = BackendChoice(which, "explicitly requested")
         else:
             raise ValueError(
                 f"unknown mining backend {which!r}: expected auto, store, "
-                "dense, streaming, or gfp")
+                "dense, streaming, spilled, or gfp")
         if choice.name == "gfp":
             from ..mining.gfp_backend import GFPBackend
             return GFPBackend.from_store(
                 self.store, use_kernel=self.store.use_kernel), choice
-        # dense / streaming / distributed verdicts all mine through the
-        # store's composed sweep: residency is the STORE's decision (its
-        # base is already dense or streaming by the same traits), and a
-        # serving store has no mesh to shard over
+        # dense / streaming / spilled / distributed verdicts all mine through
+        # the store's composed sweep: residency is the STORE's decision (its
+        # base is already dense, streaming, or spilled by the same traits),
+        # and a serving store has no mesh to shard over
         return composed, choice
 
     def mine(self, theta: float, *, checkpoint=None,

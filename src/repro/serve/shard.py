@@ -94,6 +94,7 @@ class ShardedDB:
         chunk_rows: Optional[int] = None,
         stream_threshold_bytes: Optional[int] = None,
         merge_ratio: float = 0.25,
+        min_compact_rows: Optional[int] = None,
     ):
         if n_shards <= 0:
             raise ValueError("n_shards must be positive")
@@ -125,7 +126,8 @@ class ShardedDB:
                 use_kernel=use_kernel, streaming=streaming,
                 chunk_rows=chunk_rows,
                 stream_threshold_bytes=stream_threshold_bytes,
-                merge_ratio=merge_ratio))
+                merge_ratio=merge_ratio,
+                min_compact_rows=min_compact_rows))
         # per-shard totals fitting int32 does not bound their SUM — the
         # serving guarantee is on the merged counts, so guard globally
         self._class_totals = VersionedDB._guard_totals(

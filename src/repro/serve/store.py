@@ -5,16 +5,24 @@ large list of itemsets" — a query workload.  ``VersionedDB`` keeps one encoded
 bitmap RESIDENT between queries (the serving analogue of the encoded-DB
 technique of Danessh et al. 2010) instead of re-encoding per call:
 
-  * the **base** segment is a device ``DenseDB`` or host ``StreamingDB``,
-    selected by encoded size (same threshold discipline as the mining stack);
+  * the **base** segment is a device ``DenseDB``, host ``StreamingDB``, or
+    disk ``SpilledDB`` (``mining/spill.py``: mmap segment files + async
+    prefetch), selected by encoded size (same threshold discipline as the
+    mining stack; the spill tier needs a configured ``spill_dir`` and engages
+    past ``spill_threshold_bytes`` of host RAM);
   * ``append(transactions)`` encodes a new batch under a TAIL-EXTENDED vocab
     (existing bit columns never move, so resident rows stay valid without
     re-encoding), dedups it against the current tail **delta** segment, and
     bumps the monotonically increasing ``version``;
   * the delta is folded into the base (full re-dedup + residency reselection)
-    once it grows past ``merge_ratio`` of the base — until then every counting
-    sweep COMPOSES base + delta: counts are int32 sums, so the composition is
-    bit-identical to a fresh encode of the concatenated history;
+    once it grows past ``merge_ratio`` of the base AND the ``min_compact_rows``
+    floor (a cold store must not pay a full rebuild per tiny append) — until
+    then every counting sweep COMPOSES base + delta: counts are int32 sums, so
+    the composition is bit-identical to a fresh encode of the concatenated
+    history.  With ``background_compaction=True`` the fold runs on an
+    :class:`~repro.serve.compactor.AsyncCompactor` thread (snapshot under
+    ``_store_lock``, build off-lock, epoch-checked commit), so ``append``
+    returns without paying it;
   * ``counts`` / ``counts_masks`` answer a (K, W) target block with (K, C)
     per-class counts, exact at the current version.
 
@@ -28,6 +36,8 @@ same additivity argument that makes the base+delta composition below exact.
 """
 from __future__ import annotations
 
+import os
+import threading
 import time
 from typing import Hashable, Optional, Sequence
 
@@ -40,9 +50,18 @@ from ..obs import REGISTRY, TRACER
 from ..mining.dense import DenseDB
 from ..mining.encode import (ItemVocab, class_weights, dedup_rows,
                              encode_bitmap, extend_vocab, pad_words)
+from ..mining.spill import (DEFAULT_SPILL_THRESHOLD_BYTES, SpilledDB,
+                            spilled_counts)
 from ..mining.stream import StreamingDB, streaming_counts
+from .compactor import AsyncCompactor
 
 Item = Hashable
+
+# Auto-compaction floor: below this many delta rows an append never triggers
+# the fold, whatever merge_ratio says — a cold/tiny base would otherwise pay
+# a full re-dedup + residency rebuild on EVERY append (bootstrap thrash).
+# Explicit compact() calls ignore the floor.
+DEFAULT_MIN_COMPACT_ROWS = 1024
 
 _M_APPENDS = REGISTRY.counter("store_appends_total")
 _M_APPEND_ROWS = REGISTRY.counter("store_appended_rows_total")
@@ -94,13 +113,32 @@ class VersionedDB:
         chunk_rows: Optional[int] = None,
         stream_threshold_bytes: Optional[int] = None,
         merge_ratio: float = 0.25,
+        min_compact_rows: Optional[int] = None,
+        spill: Optional[bool] = None,
+        spill_dir: Optional[str] = None,
+        spill_threshold_bytes: Optional[int] = None,
+        background_compaction: bool = False,
     ):
         self.n_classes = check_class_labels(classes, n_classes)
         self.use_kernel = use_kernel
         self.chunk_rows = chunk_rows
         self.merge_ratio = merge_ratio
+        self.min_compact_rows = (DEFAULT_MIN_COMPACT_ROWS
+                                 if min_compact_rows is None
+                                 else int(min_compact_rows))
         self._streaming = streaming
         self._stream_threshold = stream_threshold_bytes
+        # disk tier: spill=None engages past spill_threshold_bytes when a
+        # directory is configured; True forces it; False disables it
+        self._spill = spill
+        self._spill_dir = (spill_dir if spill_dir is not None
+                           else os.environ.get("REPRO_SPILL_DIR"))
+        self._spill_threshold = spill_threshold_bytes
+        self._spill_gen = 0
+        # one re-entrant lock over base/delta/counter state: cheap when
+        # uncontended, required once the background compactor can race an
+        # append or a composed sweep
+        self._store_lock = threading.RLock()
         self.version = 0
         self.n_rows = 0
         self.kernel_launches = 0
@@ -124,6 +162,15 @@ class VersionedDB:
             self._class_totals + uw.sum(axis=0, dtype=np.int64))
         self.n_rows = len(transactions)
         self.base = self._make_base(ub, uw)
+        self._compactor: Optional[AsyncCompactor] = (
+            AsyncCompactor(self) if background_compaction else None)
+
+    def close(self) -> None:
+        """Drain and stop the background compactor (if any).  The store
+        stays fully usable afterwards (compaction reverts to inline)."""
+        if self._compactor is not None:
+            self._compactor.close()
+            self._compactor = None
 
     @staticmethod
     def _guard_totals(totals: np.ndarray) -> np.ndarray:
@@ -152,7 +199,26 @@ class VersionedDB:
                              self.vocab if vocab is None else vocab)
         return dedup_rows(bits, w)
 
-    def _make_base(self, bits: np.ndarray, weights: np.ndarray):
+    def _spill_threshold_resolved(self) -> Optional[int]:
+        """The host-RAM budget past which the base spills, or ``None`` when
+        the disk tier is unavailable (no directory configured / disabled)."""
+        if self._spill is False or self._spill_dir is None:
+            return None
+        return (DEFAULT_SPILL_THRESHOLD_BYTES if self._spill_threshold is None
+                else int(self._spill_threshold))
+
+    def _residency_for(self, bits, weights, vocab) -> str:
+        """Pick ``"dense"`` / ``"streaming"`` / ``"spilled"`` for a candidate
+        base.  Explicit ``spill=True`` wins; otherwise a configured spill
+        budget caps host residency (even forced-streaming bases), and with
+        nothing explicit the adaptive chooser decides from measured traits."""
+        if self._spill is True:
+            if self._spill_dir is None:
+                raise ValueError(
+                    "spill=True requires spill_dir= (or $REPRO_SPILL_DIR)")
+            self.backend_choice = None
+            return "spilled"
+        spill_thr = self._spill_threshold_resolved()
         stream = self._streaming
         if stream is None and self.chunk_rows is not None:
             # explicit chunk_rows opts in, mirroring _resolve_streaming in
@@ -161,33 +227,62 @@ class VersionedDB:
         if stream is None:
             # adaptive residency: the chooser measures the encoded rows
             # (footprint, density, skew, compressibility) instead of the old
-            # bare size threshold.  Residency only has two states, so any
-            # non-"streaming" verdict keeps the base device-dense — the
-            # measured choice itself is kept (stats + CountServer.mine
-            # consult it for the engine pick)
+            # bare size threshold.  Non-residency verdicts (gfp/dense) keep
+            # the base device-dense — the measured choice itself is kept
+            # (stats + CountServer.mine consult it for the engine pick)
             from ..mining.chooser import DatasetTraits, choose_backend
-            traits = DatasetTraits.measure(bits, weights, self.vocab,
-                                           self.n_rows)
+            traits = DatasetTraits.measure(bits, weights, vocab, self.n_rows)
             self.backend_choice = choose_backend(
-                traits, stream_threshold_bytes=self._stream_threshold)
-            stream = self.backend_choice.name == "streaming"
-        else:
-            self.backend_choice = None
-        if stream:
-            return StreamingDB.from_arrays(self.vocab, bits, weights,
+                traits, stream_threshold_bytes=self._stream_threshold,
+                spill_threshold_bytes=spill_thr)
+            if self.backend_choice.name in ("streaming", "spilled"):
+                return self.backend_choice.name
+            return "dense"
+        self.backend_choice = None
+        if spill_thr is not None and \
+                int(bits.nbytes + weights.nbytes) > spill_thr:
+            return "spilled"
+        return "streaming" if stream else "dense"
+
+    def _make_base(self, bits: np.ndarray, weights: np.ndarray, vocab=None):
+        vocab = self.vocab if vocab is None else vocab
+        residency = self._residency_for(bits, weights, vocab)
+        if residency == "spilled":
+            # generation directories: the new base lands in a fresh gen, the
+            # replaced one is deleted AFTER the swap (build-before-drop on
+            # disk too); the counter bump is atomic so a background build
+            # and an explicit compact() never share a directory
+            with self._store_lock:
+                gen = self._spill_gen
+                self._spill_gen += 1
+            gen_dir = os.path.join(self._spill_dir, f"gen{gen:05d}")
+            return SpilledDB.spill(vocab, bits, weights, self.n_rows,
+                                   self.n_classes, gen_dir,
+                                   chunk_rows=self.chunk_rows)
+        if residency == "streaming":
+            return StreamingDB.from_arrays(vocab, bits, weights,
                                            self.n_rows, self.n_classes,
                                            chunk_rows=self.chunk_rows)
-        return DenseDB.from_arrays(self.vocab, bits, weights,
+        return DenseDB.from_arrays(vocab, bits, weights,
                                    self.n_rows, self.n_classes)
 
     # -- introspection --------------------------------------------------------
     @property
     def resident(self) -> str:
+        if isinstance(self.base, SpilledDB):
+            return "spilled"
         return "streaming" if isinstance(self.base, StreamingDB) else "dense"
 
     @property
     def base_rows(self) -> int:
-        return int(self.base.bits.shape[0])
+        # a spilled base answers from its manifest — never touch the disk
+        # just to report a row count
+        u = getattr(self.base, "n_unique", None)
+        return int(u) if u is not None else int(self.base.bits.shape[0])
+
+    def _base_width(self) -> int:
+        w = getattr(self.base, "n_words", None)
+        return int(w) if w is not None else int(self.base.bits.shape[1])
 
     @property
     def delta_rows(self) -> int:
@@ -195,26 +290,44 @@ class VersionedDB:
 
     @property
     def nbytes(self) -> int:
-        # .nbytes is metadata on both numpy and jax arrays: no D2H copy of a
-        # device-resident base just to report a size (stats run per flush)
-        base = int(self.base.bits.nbytes + self.base.weights.nbytes)
+        # .nbytes is metadata on numpy/jax arrays — and a manifest fact on a
+        # spilled base: no D2H copy or disk read just to report a size
+        if isinstance(self.base, SpilledDB):
+            base = int(self.base.nbytes)
+        else:
+            base = int(self.base.bits.nbytes + self.base.weights.nbytes)
         if self._delta_bits is not None:
             base += self._delta_bits.nbytes + self._delta_weights.nbytes
         return base
 
     def stats(self) -> dict:
-        return {
-            "version": self.version, "n_rows": self.n_rows,
-            "n_classes": self.n_classes, "vocab_size": self.vocab.size,
-            "resident": self.resident, "base_rows": self.base_rows,
-            "delta_rows": self.delta_rows, "nbytes": self.nbytes,
-            "kernel_launches": self.kernel_launches,
-            "appends": self.n_appends, "compactions": self.n_compactions,
-            "failed_compactions": self.n_failed_compactions,
-            "last_compaction_error": self.last_compaction_error,
-            "backend_choice": (None if self.backend_choice is None
-                               else self.backend_choice.name),
-        }
+        # compactor stats are read BEFORE taking the store lock: its own _mu
+        # orders after _store_lock (request() under append), and a
+        # stats-name-resolved call under the held lock would hand repro-lint
+        # a reversed edge
+        comp = None if self._compactor is None else self._compactor.stats()
+        with self._store_lock:
+            out = {
+                "version": self.version, "n_rows": self.n_rows,
+                "n_classes": self.n_classes, "vocab_size": self.vocab.size,
+                "resident": self.resident, "base_rows": self.base_rows,
+                "delta_rows": self.delta_rows, "nbytes": self.nbytes,
+                "kernel_launches": self.kernel_launches,
+                "appends": self.n_appends, "compactions": self.n_compactions,
+                "failed_compactions": self.n_failed_compactions,
+                "last_compaction_error": self.last_compaction_error,
+                "min_compact_rows": self.min_compact_rows,
+                "backend_choice": (None if self.backend_choice is None
+                                   else self.backend_choice.name),
+                "spill": (None if not isinstance(self.base, SpilledDB) else {
+                    "directory": self.base.directory,
+                    "segments": self.base.n_chunks,
+                    "chunk_rows": self.base.chunk_rows,
+                    "disk_bytes": self.base.nbytes,
+                }),
+                "compactor": comp,
+            }
+        return out
 
     # -- append ---------------------------------------------------------------
     def append(
@@ -240,47 +353,61 @@ class VersionedDB:
         check_class_labels(classes, self.n_classes)
         vocab = extend_vocab(transactions, self.vocab)
         ub, uw = self._encode_batch(transactions, classes, vocab)
-        totals = self._guard_totals(
-            self._class_totals + uw.sum(axis=0, dtype=np.int64))
-        self.vocab = vocab
-        self._class_totals = totals
+        with self._store_lock:
+            totals = self._guard_totals(
+                self._class_totals + uw.sum(axis=0, dtype=np.int64))
+            self.vocab = vocab
+            self._class_totals = totals
 
-        w_now = self.vocab.n_words
-        if self._delta_bits is not None:
-            # dedup against the tail: one growing delta segment
-            ub, uw = dedup_rows(
-                np.concatenate([pad_words(self._delta_bits, w_now), ub]),
-                np.concatenate([self._delta_weights, uw]))
-        self._delta_bits, self._delta_weights = ub, uw
-        self._delta_device = None
-        self.n_rows += len(transactions)
-        self.n_appends += 1
-        self.version += 1
-        _M_APPENDS.inc()
-        _M_APPEND_ROWS.inc(len(transactions))
-        if self.delta_rows > self.merge_ratio * max(1, self.base_rows):
-            try:
-                self.compact()
-            except Exception as e:
-                # compaction is a pure optimization and compact() is
-                # failure-safe (the new base is built BEFORE the delta
-                # drops), so the store still serves exact counts from
-                # base+delta.  The batch IS committed at this point — an
-                # escaping compactor error would masquerade as a rejected
-                # append and invite a double-counting retry.
-                self.n_failed_compactions += 1
-                self.last_compaction_error = f"{type(e).__name__}: {e}"
-                _M_FAILED_COMPACTIONS.inc()
+            w_now = self.vocab.n_words
+            if self._delta_bits is not None:
+                # dedup against the tail: one growing delta segment
+                ub, uw = dedup_rows(
+                    np.concatenate([pad_words(self._delta_bits, w_now), ub]),
+                    np.concatenate([self._delta_weights, uw]))
+            self._delta_bits, self._delta_weights = ub, uw
+            self._delta_device = None
+            self.n_rows += len(transactions)
+            self.n_appends += 1
+            self.version += 1
+            _M_APPENDS.inc()
+            _M_APPEND_ROWS.inc(len(transactions))
+            # merge_ratio decides WHEN the fold pays; min_compact_rows keeps
+            # a cold/tiny base from re-deduping the world on every append
+            if self.delta_rows >= self.min_compact_rows and \
+                    self.delta_rows > self.merge_ratio * max(1, self.base_rows):
+                if self._compactor is not None:
+                    # off the serving path: the append returns now, the
+                    # compactor thread snapshots/builds/commits behind
+                    # _store_lock (epoch-checked, failure-safe)
+                    self._compactor.request()
+                else:
+                    try:
+                        self.compact()
+                    except Exception as e:
+                        # compaction is a pure optimization and compact() is
+                        # failure-safe (the new base is built BEFORE the
+                        # delta drops), so the store still serves exact
+                        # counts from base+delta.  The batch IS committed at
+                        # this point — an escaping compactor error would
+                        # masquerade as a rejected append and invite a
+                        # double-counting retry.
+                        self.n_failed_compactions += 1
+                        self.last_compaction_error = f"{type(e).__name__}: {e}"
+                        _M_FAILED_COMPACTIONS.inc()
         _H_APPEND_MS.observe((time.perf_counter() - t0) * 1e3)
         return self.version
 
     def compact(self) -> None:
         """Fold the delta into the base: full re-dedup at the current vocab
-        width, then residency reselection (dense vs streaming) by size.
-        Pure compaction — counts (and therefore ``version``) are unchanged."""
-        with TRACER.span("store.compact",
-                         {"base_rows": self.base_rows,
-                          "delta_rows": self.delta_rows}):
+        width, then residency reselection (dense vs streaming vs spilled) by
+        size.  Pure compaction — counts (and therefore ``version``) are
+        unchanged.  Explicit calls ignore the ``min_compact_rows`` floor
+        (the floor gates only append-triggered auto-compaction)."""
+        with self._store_lock, \
+                TRACER.span("store.compact",
+                            {"base_rows": self.base_rows,
+                             "delta_rows": self.delta_rows}):
             w_now = self.vocab.n_words
             base_bits = pad_words(np.asarray(self.base.bits), w_now)
             base_w = np.asarray(self.base.weights)
@@ -293,12 +420,79 @@ class VersionedDB:
             # (e.g. device OOM at residency reselection) must leave the
             # composed base+delta counts intact, not silently lose the
             # delta rows
+            old = self.base
             self.base = self._make_base(ub, uw)
             if had_delta:
                 self._delta_bits = self._delta_weights = None
                 self._delta_device = None
                 self.n_compactions += 1
                 _M_COMPACTIONS.inc()
+        self._drop_spilled(old)
+
+    def _drop_spilled(self, old_base) -> None:
+        """Delete a REPLACED spilled generation's segment directory.  Only
+        after the swap (on-disk build-before-drop), and never fatally — a
+        leaked directory is recoverable garbage, a crashed serve path is
+        not."""
+        if old_base is self.base or not isinstance(old_base, SpilledDB):
+            return
+        try:
+            old_base.delete()
+        except OSError as e:
+            with self._store_lock:
+                self.last_compaction_error = f"spill cleanup: {e}"
+
+    def _compact_pass(self) -> bool:
+        """One background compaction attempt (the ``AsyncCompactor``'s unit
+        of work).  Snapshot under the lock, build off-lock, commit under the
+        lock only if no append (or other compaction) landed in between.
+
+        Returns ``True`` when done (committed, nothing to do, or build
+        failed — failures are absorbed into ``last_compaction_error`` /
+        ``n_failed_compactions``, the delta stays intact) and ``False`` when
+        a concurrent append invalidated the build (caller may retry)."""
+        with self._store_lock:
+            if self._delta_bits is None:
+                return True
+            epoch = (self.n_appends, self.n_compactions)
+            vocab = self.vocab
+            base = self.base
+            dbits, dw = self._delta_bits, self._delta_weights
+        new_base = None
+        try:
+            with TRACER.span("store.bg_compact",
+                             {"delta_rows": int(dbits.shape[0])}):
+                w_now = vocab.n_words
+                bits = np.concatenate(
+                    [pad_words(np.asarray(base.bits), w_now),
+                     pad_words(dbits, w_now)])
+                w = np.concatenate([np.asarray(base.weights), dw])
+                ub, uw = dedup_rows(bits, w)
+                new_base = self._make_base(ub, uw, vocab=vocab)
+        except Exception as e:
+            with self._store_lock:
+                self.n_failed_compactions += 1
+                self.last_compaction_error = f"{type(e).__name__}: {e}"
+            _M_FAILED_COMPACTIONS.inc()
+            return True
+        with self._store_lock:
+            if (self.n_appends, self.n_compactions) != epoch:
+                committed = False
+            else:
+                self.base = new_base
+                self._delta_bits = self._delta_weights = None
+                self._delta_device = None
+                self.n_compactions += 1
+                committed = True
+        if committed:
+            _M_COMPACTIONS.inc()
+            self._drop_spilled(base)
+            return True
+        # a concurrent append won the race: this build counts rows that are
+        # no longer the whole story — discard it (and its on-disk gen)
+        if isinstance(new_base, SpilledDB):
+            new_base.delete()
+        return False
 
     # -- counting -------------------------------------------------------------
     def _narrow(self, masks: np.ndarray, w_seg: int):
@@ -330,33 +524,37 @@ class VersionedDB:
             return np.zeros((0, self.n_classes), np.int32)
         bk = {} if block_k is None else {"block_k": block_k}
         total = np.zeros((k, self.n_classes), np.int32)
-        # base segment
-        if self.base_rows:
-            narrow, oob = self._narrow(masks, int(self.base.bits.shape[1]))
-            if isinstance(self.base, StreamingDB):
-                got = np.asarray(self.base.counts(
-                    narrow, use_kernel=self.use_kernel, **bk))
-                self.kernel_launches += self.base.n_chunks
-            else:
+        # the whole sweep runs under the store lock so a background commit
+        # cannot swap the base mid-composition (base counted pre-compaction
+        # + delta counted post-compaction would double-count the fold)
+        with self._store_lock:
+            # base segment
+            if self.base_rows:
+                narrow, oob = self._narrow(masks, self._base_width())
+                if isinstance(self.base, (StreamingDB, SpilledDB)):
+                    got = np.asarray(self.base.counts(
+                        narrow, use_kernel=self.use_kernel, **bk))
+                    self.kernel_launches += self.base.n_chunks
+                else:
+                    got = np.asarray(itemset_counts(
+                        self.base.bits, jnp.asarray(narrow), self.base.weights,
+                        use_kernel=self.use_kernel, **bk))
+                    self.kernel_launches += 1
+                total += self._zero_oob(got, oob)
+            # delta segment (bounded by merge_ratio * base_rows: one launch);
+            # its device mirror persists between appends — queries don't pay a
+            # fresh H2D upload of identical delta bytes on every flush
+            if self._delta_bits is not None:
+                narrow, oob = self._narrow(masks, self._delta_bits.shape[1])
+                if self._delta_device is None:
+                    self._delta_device = (jnp.asarray(self._delta_bits),
+                                          jnp.asarray(self._delta_weights))
+                d_bits, d_weights = self._delta_device
                 got = np.asarray(itemset_counts(
-                    self.base.bits, jnp.asarray(narrow), self.base.weights,
+                    d_bits, jnp.asarray(narrow), d_weights,
                     use_kernel=self.use_kernel, **bk))
                 self.kernel_launches += 1
-            total += self._zero_oob(got, oob)
-        # delta segment (bounded by merge_ratio * base_rows: one launch);
-        # its device mirror persists between appends — queries don't pay a
-        # fresh H2D upload of identical delta bytes on every flush
-        if self._delta_bits is not None:
-            narrow, oob = self._narrow(masks, self._delta_bits.shape[1])
-            if self._delta_device is None:
-                self._delta_device = (jnp.asarray(self._delta_bits),
-                                      jnp.asarray(self._delta_weights))
-            d_bits, d_weights = self._delta_device
-            got = np.asarray(itemset_counts(
-                d_bits, jnp.asarray(narrow), d_weights,
-                use_kernel=self.use_kernel, **bk))
-            self.kernel_launches += 1
-            total += self._zero_oob(got, oob)
+                total += self._zero_oob(got, oob)
         return total
 
     def counts(self, itemsets: Sequence[Sequence[Item]]) -> np.ndarray:
@@ -422,7 +620,8 @@ class VersionedCountBackend(CountBackend):
         if not self.store.base_rows:
             return 0
         return (self.store.base.n_chunks
-                if isinstance(self.store.base, StreamingDB) else 1)
+                if isinstance(self.store.base, (StreamingDB, SpilledDB))
+                else 1)
 
     @property
     def n_count_chunks(self) -> int:
@@ -436,7 +635,8 @@ class VersionedCountBackend(CountBackend):
             "base_rows": self.store.base_rows,
             "delta_rows": self.store.delta_rows,
             "chunk_rows": (base.chunk_rows
-                           if isinstance(base, StreamingDB) else None),
+                           if isinstance(base, (StreamingDB, SpilledDB))
+                           else None),
         }
 
     def mine_signature(self) -> dict:
@@ -446,16 +646,36 @@ class VersionedCountBackend(CountBackend):
         """Measured traits over the composed base+delta rows (the same rows
         every sweep counts), for the adaptive engine pick in
         ``CountServer.mine``."""
-        from ..mining.chooser import DatasetTraits
+        from dataclasses import replace as _dc_replace
+
+        from ..mining.chooser import TRAIT_SAMPLE_ROWS, DatasetTraits
 
         store = self.store
-        w_now = store.vocab.n_words
-        bits = pad_words(np.asarray(store.base.bits), w_now)
-        wts = np.asarray(store.base.weights)
-        if store._delta_bits is not None:
-            bits = np.concatenate([bits, pad_words(store._delta_bits, w_now)])
-            wts = np.concatenate([wts, store._delta_weights])
-        return DatasetTraits.measure(bits, wts, store.vocab, store.n_rows)
+        with store._store_lock:
+            w_now = store.vocab.n_words
+            if isinstance(store.base, SpilledDB):
+                # sample the head segment instead of materializing the whole
+                # spilled base from disk; patch in the TRUE footprint so the
+                # chooser sees real size, not the sample's
+                bits, wts = store.base.head(TRAIT_SAMPLE_ROWS)
+                bits = pad_words(bits, w_now)
+                if store._delta_bits is not None:
+                    bits = np.concatenate(
+                        [bits, pad_words(store._delta_bits, w_now)])
+                    wts = np.concatenate([wts, store._delta_weights])
+                t = DatasetTraits.measure(bits, wts, store.vocab,
+                                          store.n_rows)
+                u = store.base_rows + store.delta_rows
+                return _dc_replace(
+                    t, nbytes=store.nbytes, n_unique=u,
+                    dedup_ratio=(u / store.n_rows if store.n_rows else 1.0))
+            bits = pad_words(np.asarray(store.base.bits), w_now)
+            wts = np.asarray(store.base.weights)
+            if store._delta_bits is not None:
+                bits = np.concatenate(
+                    [bits, pad_words(store._delta_bits, w_now)])
+                wts = np.concatenate([wts, store._delta_weights])
+            return DatasetTraits.measure(bits, wts, store.vocab, store.n_rows)
 
     def counts(self, masks: np.ndarray, *, start_chunk: int = 0,
                init: Optional[np.ndarray] = None, on_chunk=None) -> np.ndarray:
@@ -465,53 +685,64 @@ class VersionedCountBackend(CountBackend):
                  else np.array(np.asarray(init), np.int32))
         if k == 0:
             return total
-        nb = self._base_chunks()
-        if nb and start_chunk < nb:
-            narrow, oob = store._narrow(
-                masks, int(np.asarray(store.base.bits).shape[1]))
-            if isinstance(store.base, StreamingDB):
-                hook = None
-                if on_chunk is not None:
-                    def hook(i, acc):
-                        a = np.asarray(acc)
-                        if i == nb - 1:
-                            # the saved boundary accumulator must already be
-                            # the finished base block (oob rows zeroed): a
-                            # resume at start_chunk == nb adds delta directly
-                            a = store._zero_oob(a, oob)
-                        on_chunk(i, a)
-                acc = streaming_counts(
-                    store.base.bits, narrow, store.base.weights,
-                    chunk_rows=store.base.chunk_rows,
-                    use_kernel=store.use_kernel,
-                    start_chunk=start_chunk, init=total, on_chunk=hook)
-                store.kernel_launches += nb - start_chunk
-                total = store._zero_oob(np.asarray(acc), oob)
-            else:
+        # under the store lock: a background compaction commit mid-sweep
+        # would change the chunk grid (and double-count the folded delta)
+        with store._store_lock:
+            nb = self._base_chunks()
+            if nb and start_chunk < nb:
+                narrow, oob = store._narrow(masks, store._base_width())
+                if isinstance(store.base, (StreamingDB, SpilledDB)):
+                    hook = None
+                    if on_chunk is not None:
+                        def hook(i, acc):
+                            a = np.asarray(acc)
+                            if i == nb - 1:
+                                # the saved boundary accumulator must already
+                                # be the finished base block (oob rows
+                                # zeroed): a resume at start_chunk == nb adds
+                                # delta directly
+                                a = store._zero_oob(a, oob)
+                            on_chunk(i, a)
+                    if isinstance(store.base, SpilledDB):
+                        acc = spilled_counts(
+                            store.base, narrow, use_kernel=store.use_kernel,
+                            start_chunk=start_chunk, init=total,
+                            on_chunk=hook)
+                    else:
+                        acc = streaming_counts(
+                            store.base.bits, narrow, store.base.weights,
+                            chunk_rows=store.base.chunk_rows,
+                            use_kernel=store.use_kernel,
+                            start_chunk=start_chunk, init=total,
+                            on_chunk=hook)
+                    store.kernel_launches += nb - start_chunk
+                    total = store._zero_oob(np.asarray(acc), oob)
+                else:
+                    got = np.asarray(itemset_counts(
+                        store.base.bits, jnp.asarray(narrow),
+                        store.base.weights, use_kernel=store.use_kernel))
+                    store.kernel_launches += 1
+                    total = total + store._zero_oob(got, oob)
+                    if on_chunk is not None:
+                        on_chunk(0, total)
+            if store._delta_bits is not None and start_chunk <= nb:
+                narrow, oob = store._narrow(masks, store._delta_bits.shape[1])
+                if store._delta_device is None:
+                    store._delta_device = (jnp.asarray(store._delta_bits),
+                                           jnp.asarray(store._delta_weights))
+                d_bits, d_weights = store._delta_device
                 got = np.asarray(itemset_counts(
-                    store.base.bits, jnp.asarray(narrow), store.base.weights,
+                    d_bits, jnp.asarray(narrow), d_weights,
                     use_kernel=store.use_kernel))
                 store.kernel_launches += 1
                 total = total + store._zero_oob(got, oob)
                 if on_chunk is not None:
-                    on_chunk(0, total)
-        if store._delta_bits is not None and start_chunk <= nb:
-            narrow, oob = store._narrow(masks, store._delta_bits.shape[1])
-            if store._delta_device is None:
-                store._delta_device = (jnp.asarray(store._delta_bits),
-                                       jnp.asarray(store._delta_weights))
-            d_bits, d_weights = store._delta_device
-            got = np.asarray(itemset_counts(
-                d_bits, jnp.asarray(narrow), d_weights,
-                use_kernel=store.use_kernel))
-            store.kernel_launches += 1
-            total = total + store._zero_oob(got, oob)
-            if on_chunk is not None:
-                on_chunk(nb, total)
-        elif nb == 0 and start_chunk == 0 and on_chunk is not None:
-            # empty store: n_count_chunks still claims a 1-chunk grid, so the
-            # (trivially exact, all-zero) sweep must COMPLETE that chunk —
-            # otherwise a checkpointed mine records zero chunk progress
-            # against a claimed chunk and the partial never becomes resumable
-            on_chunk(0, total)
+                    on_chunk(nb, total)
+            elif nb == 0 and start_chunk == 0 and on_chunk is not None:
+                # empty store: n_count_chunks still claims a 1-chunk grid, so
+                # the (trivially exact, all-zero) sweep must COMPLETE that
+                # chunk — otherwise a checkpointed mine records zero chunk
+                # progress against a claimed chunk and the partial never
+                # becomes resumable
+                on_chunk(0, total)
         return total

@@ -253,7 +253,64 @@ def test_choose_chunk_rows_honors_table():
     # no n_rows -> pure heuristic, table untouched
     heur = choose_chunk_rows(2, 2)
     autotune.set_active_table(None)
-    assert choose_chunk_rows(2, 2, n_rows=100000) == heur
+    # table gone: the heuristic again, clamped to the aligned row count (the
+    # 64MB staging budget allows far more rows than the DB has)
+    assert choose_chunk_rows(2, 2, n_rows=100000) == min(heur, 100352)
+
+
+def test_choose_chunk_rows_clamped_to_db_rows():
+    """A tuned chunk_rows measured on a bigger bucket must be clamped to the
+    aligned row count: handing a 2k-row DB a 16384-row chunk would zero-pad
+    the single ragged chunk 8x (regression for the padding-waste bug)."""
+    bucket = geometry_bucket(2000, DEFAULT_BLOCK_K, 2, 2)
+    autotune.set_active_table(_mk_table({bucket: _entry(chunk_rows=16384)}))
+    try:
+        got = choose_chunk_rows(2, 2, n_rows=2000)
+    finally:
+        autotune.set_active_table(None)
+    assert got == 2048                       # align_up(2000, 1024), not 16384
+    # the budget heuristic clamps the same way (64MB budget >> 2000 rows)
+    assert choose_chunk_rows(2, 2, n_rows=2000) == 2048
+    # custom align: clamp rounds the row count up to one aligned chunk
+    assert choose_chunk_rows(4, 2, budget_bytes=1 << 30, align=128,
+                             n_rows=300) == 384
+    # clamping never produces a chunk below one align unit
+    assert choose_chunk_rows(2, 2, n_rows=1) == 1024
+
+
+def test_oversized_tuned_chunk_never_launches_past_padded_rows(monkeypatch):
+    """With a tuned table demanding oversized chunks, no streamed launch may
+    exceed the align-rounded DB row count (the lattice-invariance battery's
+    launch-size bound)."""
+    import repro.mining.stream as stream_mod
+
+    tx, y = _small_db(3, rows=300, items=10)
+    db = DenseDB.encode(tx, classes=y, n_classes=2)
+    bits, wts = np.asarray(db.bits), np.asarray(db.weights)
+    n_unique = bits.shape[0]
+    bucket = geometry_bucket(n_unique, DEFAULT_BLOCK_K, bits.shape[1], 2)
+    masks = bits[:8].copy()
+    from repro.kernels.itemset_count import itemset_counts
+    want = np.asarray(itemset_counts(db.bits, masks, db.weights))
+
+    launched = []
+    real = stream_mod.itemset_counts_into
+
+    def spy(acc, cur_tx, tgt, w, **kw):
+        launched.append(int(cur_tx.shape[0]))
+        return real(acc, cur_tx, tgt, w, **kw)
+
+    monkeypatch.setattr(stream_mod, "itemset_counts_into", spy)
+    autotune.set_active_table(_mk_table({bucket: _entry(chunk_rows=16384)}))
+    try:
+        sdb = StreamingDB.from_arrays(db.vocab, bits, wts, db.n_rows, 2)
+        got = np.asarray(sdb.counts(masks))
+    finally:
+        autotune.set_active_table(None)
+    assert launched, "streamed sweep never launched"
+    bound = -(-n_unique // 1024) * 1024
+    assert max(launched) <= bound, (launched, bound)
+    np.testing.assert_array_equal(got, want)
 
 
 # -- config invariance: the whole lattice is bit-exact -----------------------

@@ -145,3 +145,56 @@ def test_threaded_serving_traffic_has_no_lock_cycles(rng):
     assert observed <= static_edges, (
         f"dynamic run observed lock edges the static checker missed: "
         f"{sorted(observed - static_edges)}")
+
+
+def test_disk_tier_traffic_edges_subset_of_static_graph(rng, tmp_path):
+    """The disk-tier concurrency surface under live traffic: an async server
+    over a SPILLED store with the background compactor on, instrumented on
+    all four serving locks, racing queries against appends.  No order
+    cycles, every observed edge already in the static CONC001 graph, and the
+    new store-lock -> compactor-queue nesting actually exercised."""
+    checker = ConcurrencyChecker()
+    analyze_paths([str(SRC)], [checker], root=str(SRC))
+    static_edges = set(checker.lock_edges)
+
+    srv = CountServer(_db(rng, 120, 10), async_flush=True, max_delay_ms=20,
+                      min_batch=4, chunk_rows=32, spill_dir=str(tmp_path),
+                      spill_threshold_bytes=64, merge_ratio=0.05,
+                      min_compact_rows=0, background_compaction=True)
+    assert srv.store.resident == "spilled"
+    watcher = instrument_server(srv, registry=obs.REGISTRY)
+    try:
+        def client(i):
+            futs = [srv.submit_async(f"c{i}", [(0, 1), (2,)])
+                    for _ in range(4)]
+            for fut in futs:
+                fut.result(timeout=15)
+            srv.stats()
+
+        def appender():
+            arng = np.random.default_rng(7)
+            for _ in range(4):
+                srv.append(_db(arng, 30, 10))   # trips the bg compactor
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(3)] + [threading.Thread(target=appender)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+            assert not t.is_alive()
+        srv.flush()
+        srv.store._compactor.drain()
+        assert srv.store.last_compaction_error is None
+    finally:
+        srv.close()
+        obs.REGISTRY._lock = obs.REGISTRY._lock._lock
+
+    observed = set(watcher.edges())
+    assert watcher.cycles() == [], watcher.report()
+    # the append trigger must have nested the compactor handoff under the
+    # store lock (the edge the disk tier added to the graph)
+    assert ("VersionedDB._store_lock", "AsyncCompactor._mu") in observed
+    assert observed <= static_edges, (
+        f"dynamic run observed lock edges the static checker missed: "
+        f"{sorted(observed - static_edges)}")

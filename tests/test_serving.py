@@ -78,7 +78,9 @@ def test_versioned_db_append_exact_across_batches(merge_ratio):
     rng = np.random.default_rng(0)
     tx = _db(rng, 200, 10)
     y = [int(rng.random() < 0.3) for _ in tx]
-    db = VersionedDB(tx, classes=y, n_classes=2, merge_ratio=merge_ratio)
+    db = VersionedDB(tx, classes=y, n_classes=2, merge_ratio=merge_ratio,
+                     min_compact_rows=0)   # floor off: the 60-row deltas here
+    # are exactly what auto-compaction should fold under merge_ratio=0.25
     assert db.version == 0 and db.n_rows == 200
     history, classes = list(tx), list(y)
     probes = [(0, 1), (2,), (3, 7, 9), (11,), (4, 12)]  # 11, 12 unseen so far
@@ -264,7 +266,8 @@ def test_append_survives_compaction_failure():
     error would look like a rejected batch and invite a double-count retry)."""
     rng = np.random.default_rng(55)
     tx = _db(rng, 80, 8)
-    store = VersionedDB(tx, merge_ratio=0.01)   # any append triggers compact
+    store = VersionedDB(tx, merge_ratio=0.01,   # any append triggers compact
+                        min_compact_rows=0)
 
     def boom():
         raise MemoryError("simulated compactor OOM")

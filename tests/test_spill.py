@@ -1,0 +1,543 @@
+"""Disk-tier chunk store: spilled sweep bit-identical to streaming == dense ==
+oracle (prefetch on AND off), segment-grid resume parity, prefetch-hit
+telemetry, manifest/open validation, hard-kill resume with segments on disk,
+VersionedDB spilled residency + generation cleanup, and the background
+compactor (exactness under racing appends, build-failure absorption)."""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _pbt import given, settings, strategies as st  # hypothesis or offline shim
+from _testutil import random_problem as _random_problem
+
+from repro.core import mine_frequent
+from repro.kernels.itemset_count import itemset_counts, itemset_counts_ref
+from repro.mining import (DenseDB, ItemVocab, SpilledBackend, SpilledDB,
+                          StreamingDB, encode_targets, spilled_counts,
+                          streaming_counts)
+from repro.mining import mine_frequent_backend
+from repro.mining.chooser import DatasetTraits, backend_for_db, choose_backend
+from repro.mining.distributed import MiningCheckpoint
+from repro.mining.spill import MANIFEST_NAME
+from repro.obs import REGISTRY, counter_total
+from repro.serve import VersionedDB, versioned_mine_frequent
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class _Preempted(Exception):
+    pass
+
+
+def _db(rng, rows, items, p=0.3):
+    return [[int(a) for a in range(items) if rng.random() < p]
+            for _ in range(rows)]
+
+
+def _spill_problem(tmp, rng_seed=0, n=300, k=17, w=3, c=2, chunk=64):
+    """Random counting problem spilled to disk alongside its host arrays."""
+    rng = np.random.default_rng(rng_seed)
+    tx, tgt, wts = _random_problem(rng, n, k, w, c)
+    vocab = ItemVocab(tuple(range(32 * w)))
+    db = SpilledDB.spill(vocab, tx, wts, n, c, str(tmp), chunk_rows=chunk)
+    return db, tx, tgt, wts
+
+
+# ------------------------------------------------------- roundtrip + facts
+def test_spill_roundtrip_and_manifest_facts(tmp_path):
+    db, tx, tgt, wts = _spill_problem(tmp_path, n=300, chunk=64)
+    assert os.path.exists(os.path.join(str(tmp_path), MANIFEST_NAME))
+    assert db.n_chunks == len(db.seg_rows) == -(-300 // 64)
+    assert db.seg_rows == (64, 64, 64, 64, 44)
+    assert db.n_unique == 300 and db.n_words == 3
+    assert db.nbytes == 4 * (3 + 2) * 300
+    # materialization (the compaction path) reproduces the host arrays
+    np.testing.assert_array_equal(db.bits, tx)
+    np.testing.assert_array_equal(db.weights, wts)
+    hb, hw = db.head(10)
+    np.testing.assert_array_equal(hb, tx[:10])
+    np.testing.assert_array_equal(hw, wts[:10])
+
+    # reopen from the manifest: same grid, same counts
+    re = SpilledDB.open(str(tmp_path))
+    assert re.seg_rows == db.seg_rows and re.chunk_rows == db.chunk_rows
+    assert re.vocab.items == db.vocab.items
+    np.testing.assert_array_equal(np.asarray(re.counts(tgt)),
+                                  np.asarray(db.counts(tgt)))
+
+
+def test_spill_from_streaming_keeps_grid(tmp_path):
+    rng = np.random.default_rng(1)
+    tx = _db(rng, 150, 12)
+    sdb = StreamingDB.encode(tx, chunk_rows=32)
+    spl = SpilledDB.from_streaming(sdb, str(tmp_path))
+    assert spl.chunk_rows == 32 and spl.n_chunks == sdb.n_chunks
+    np.testing.assert_array_equal(spl.bits, sdb.bits)
+    masks = encode_targets([(a,) for a in sdb.vocab.items[:6]], sdb.vocab)
+    np.testing.assert_array_equal(np.asarray(spl.counts(masks)),
+                                  np.asarray(sdb.counts(masks)))
+
+
+def test_spill_empty_and_single_segment(tmp_path):
+    vocab = ItemVocab((0, 1))
+    empty = SpilledDB.spill(vocab, np.zeros((0, 1), np.uint32),
+                            np.zeros((0, 1), np.int32), 0, 1,
+                            str(tmp_path / "empty"))
+    assert empty.n_chunks == 0 and empty.bits.shape == (0, 1)
+    tgt = np.zeros((3, 1), np.uint32)
+    assert np.asarray(empty.counts(tgt)).shape == (3, 1)
+    assert (np.asarray(empty.counts(tgt)) == 0).all()
+
+    rng = np.random.default_rng(2)
+    tx, tgt, wts = _random_problem(rng, 40, 5, 1, 1)
+    one = SpilledDB.spill(ItemVocab(tuple(range(32))), tx, wts, 40, 1,
+                          str(tmp_path / "one"), chunk_rows=4096)
+    assert one.n_chunks == 1   # single segment: exact-rows launch, no prefetch
+    want = np.asarray(itemset_counts_ref(jnp.asarray(tx), jnp.asarray(tgt),
+                                         jnp.asarray(wts)))
+    np.testing.assert_array_equal(np.asarray(one.counts(tgt)), want)
+
+
+def test_spill_validation_errors(tmp_path):
+    vocab = ItemVocab((("a", 1), ("b", 2)))  # tuples don't JSON-round-trip
+    with pytest.raises(TypeError):
+        SpilledDB.spill(vocab, np.zeros((2, 1), np.uint32),
+                        np.ones((2, 1), np.int32), 2, 1, str(tmp_path / "t"))
+
+    # int32 overflow guard (same contract as the streaming sweep)
+    with pytest.raises(OverflowError):
+        SpilledDB.spill(ItemVocab((0,)), np.zeros((2, 1), np.uint32),
+                        np.full((2, 1), 1 << 30, np.int32), 2, 1,
+                        str(tmp_path / "o"))
+
+    db, _, tgt, _ = _spill_problem(tmp_path / "g", chunk=64)
+    with pytest.raises(ValueError):      # immutable on-disk grid
+        spilled_counts(db, tgt, chunk_rows=32)
+
+    # torn store: manifest lists a segment that is gone
+    os.remove(os.path.join(db.directory, "seg00002.bits.npy"))
+    with pytest.raises(FileNotFoundError):
+        SpilledDB.open(db.directory)
+
+    # unknown format fails loudly
+    bad = tmp_path / "bad"
+    os.makedirs(str(bad))
+    with open(os.path.join(str(bad), MANIFEST_NAME), "w") as f:
+        json.dump({"format": "not-a-spill"}, f)
+    with pytest.raises(ValueError):
+        SpilledDB.open(str(bad))
+
+
+# ------------------------------------------------- bit-identical counting
+@pytest.mark.parametrize("chunk,prefetch", [(7, True), (64, True), (64, False),
+                                            (300, True), (10_000, False)])
+def test_spilled_counts_bit_identical(tmp_path, chunk, prefetch):
+    db, tx, tgt, wts = _spill_problem(tmp_path, rng_seed=chunk, chunk=chunk)
+    got = np.asarray(spilled_counts(db, tgt, prefetch=prefetch))
+    stream = np.asarray(streaming_counts(tx, tgt, wts, chunk_rows=chunk))
+    want = np.asarray(itemset_counts_ref(jnp.asarray(tx), jnp.asarray(tgt),
+                                         jnp.asarray(wts)))
+    np.testing.assert_array_equal(got, stream)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=150),    # n
+    st.integers(min_value=1, max_value=12),     # k
+    st.integers(min_value=1, max_value=3),      # w
+    st.integers(min_value=1, max_value=3),      # c
+    st.integers(min_value=1, max_value=200),    # chunk_rows
+    st.sampled_from([True, False]),             # prefetch
+    st.integers(min_value=0, max_value=2 ** 31 - 1),
+)
+def test_spilled_property_random(n, k, w, c, chunk, prefetch, seed):
+    rng = np.random.default_rng(seed)
+    tx, tgt, wts = _random_problem(rng, n, k, w, c)
+    d = tempfile.mkdtemp(prefix="repro-spill-test-")
+    try:
+        db = SpilledDB.spill(ItemVocab(tuple(range(32 * w))), tx, wts,
+                             n, c, d, chunk_rows=chunk)
+        got = np.asarray(spilled_counts(db, tgt, prefetch=prefetch))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    want = np.asarray(itemset_counts_ref(jnp.asarray(tx), jnp.asarray(tgt),
+                                         jnp.asarray(wts)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_spilled_counts_resume_parity(tmp_path):
+    """init/start_chunk/on_chunk resume == one sweep (the checkpoint seam)."""
+    db, tx, tgt, wts = _spill_problem(tmp_path, rng_seed=5, chunk=48)
+    full = np.asarray(spilled_counts(db, tgt))
+    first = None
+
+    def grab(j, acc):
+        nonlocal first
+        if j == 1:
+            first = np.asarray(acc)
+
+    np.asarray(spilled_counts(db, tgt, on_chunk=grab))
+    resumed = np.asarray(spilled_counts(db, tgt, start_chunk=2, init=first))
+    np.testing.assert_array_equal(resumed, full)
+    # start past the last segment: the init accumulator comes back untouched
+    done = np.asarray(spilled_counts(db, tgt, start_chunk=db.n_chunks,
+                                     init=full))
+    np.testing.assert_array_equal(done, full)
+
+
+# ------------------------------------------------------ prefetch telemetry
+def test_prefetch_hit_accounting(tmp_path):
+    db, _, tgt, _ = _spill_problem(tmp_path, rng_seed=6, n=400, chunk=32)
+    assert db.n_chunks >= 8
+    before = REGISTRY.snapshot()
+
+    np.asarray(spilled_counts(db, tgt, prefetch=True))
+    after = REGISTRY.snapshot()
+    handoffs = ((counter_total(after, "spill_prefetch_hits_total")
+                 + counter_total(after, "spill_prefetch_misses_total"))
+                - (counter_total(before, "spill_prefetch_hits_total")
+                   + counter_total(before, "spill_prefetch_misses_total")))
+    assert handoffs == db.n_chunks          # one handoff per segment
+    assert "spill_prefetch_hit_ratio" in after.get("gauges", {})
+    read = (counter_total(after, "spill_bytes_read_total")
+            - counter_total(before, "spill_bytes_read_total"))
+    assert read > 0
+
+    # synchronous ablation performs no prefetcher handoffs at all
+    base = REGISTRY.snapshot()
+    np.asarray(spilled_counts(db, tgt, prefetch=False))
+    sync = REGISTRY.snapshot()
+    for name in ("spill_prefetch_hits_total", "spill_prefetch_misses_total"):
+        assert counter_total(sync, name) == counter_total(base, name)
+
+
+def test_prefetch_error_surfaces_on_consumer(tmp_path):
+    db, _, tgt, _ = _spill_problem(tmp_path, rng_seed=7, n=300, chunk=32)
+    os.remove(os.path.join(db.directory, "seg00003.bits.npy"))
+    before = counter_total(REGISTRY.snapshot(), "spill_prefetch_errors_total")
+    with pytest.raises(FileNotFoundError):
+        spilled_counts(db, tgt, prefetch=True)
+    assert counter_total(REGISTRY.snapshot(),
+                         "spill_prefetch_errors_total") == before + 1
+    # the synchronous path raises the same error on the consumer directly
+    with pytest.raises(FileNotFoundError):
+        spilled_counts(db, tgt, prefetch=False)
+
+
+# ----------------------------------------------------- backend + chooser
+def test_spilled_backend_mine_matches_host(tmp_path):
+    rng = np.random.default_rng(8)
+    tx = _db(rng, 200, 10, p=0.4)
+    want = mine_frequent(tx, 40)
+    sdb = StreamingDB.encode(tx, chunk_rows=16)
+    spl = SpilledDB.from_streaming(sdb, str(tmp_path))
+    backend = SpilledBackend(spl)
+    assert backend.n_count_chunks == spl.n_chunks
+    assert backend.chunk_signature()["backend"] == "spilled"
+    got = mine_frequent_backend(backend, 40)
+    assert got == want
+    # traits report the TRUE on-disk footprint, not the head sample's
+    t = backend.traits()
+    assert t.nbytes == spl.nbytes and t.n_unique == spl.n_unique
+
+
+def test_chooser_spill_verdict_and_backend_for_db(tmp_path, monkeypatch):
+    rng = np.random.default_rng(9)
+    tx = _db(rng, 120, 10, p=0.4)
+    ddb = DenseDB.encode(tx)
+    traits = DatasetTraits.of_db(ddb)
+    # over-budget: disk tier wins (opt-in: threshold must be passed)
+    c = choose_backend(traits, spill_threshold_bytes=64)
+    assert c.name == "spilled" and "spill budget" in c.reason
+    assert choose_backend(traits).name != "spilled"   # no budget, no spill
+
+    monkeypatch.setenv("REPRO_SPILL_DIR", str(tmp_path / "auto"))
+    os.makedirs(str(tmp_path / "auto"), exist_ok=True)
+    backend, choice = backend_for_db(ddb, spill_threshold_bytes=64)
+    assert choice.name == "spilled" and isinstance(backend, SpilledBackend)
+    want = mine_frequent(tx, 30)
+    assert mine_frequent_backend(backend, 30) == want
+
+
+def test_spilled_backend_checkpoint_kill_resume(tmp_path):
+    """In-process preemption mid-level; the resume reopens the store FROM
+    DISK (SpilledDB.open) — segment files + checkpoint are the durable
+    state, exactly the kill/resume contract of the streaming engine."""
+    rng = np.random.default_rng(10)
+    tx = _db(rng, 200, 10, p=0.4)
+    want = mine_frequent(tx, 40)
+    sdb = StreamingDB.encode(tx, chunk_rows=16)
+    spl = SpilledDB.from_streaming(sdb, str(tmp_path / "seg"))
+    assert spl.n_chunks >= 4
+    ckpt = MiningCheckpoint(str(tmp_path / "mine.json"))
+    calls = []
+
+    def die_mid_level_2(level, chunk):
+        calls.append((level, chunk))
+        if len(calls) == spl.n_chunks + 3:
+            raise _Preempted()
+
+    with pytest.raises(_Preempted):
+        mine_frequent_backend(SpilledBackend(spl), 40, checkpoint=ckpt,
+                              on_chunk=die_mid_level_2)
+
+    state = json.load(open(str(tmp_path / "mine.json")))
+    assert state["partial"]["next_chunk"] == 3
+
+    reopened = SpilledDB.open(str(tmp_path / "seg"))   # fresh object, disk-only
+    resumed = []
+    got = mine_frequent_backend(SpilledBackend(reopened), 40, checkpoint=ckpt,
+                                on_chunk=lambda l, c: resumed.append((l, c)))
+    assert got == want
+    assert resumed[0][1] == 3                # resumed mid-level at chunk 3
+    assert len(resumed) < len(calls) + spl.n_chunks
+
+
+_KILL_SCRIPT = textwrap.dedent("""
+    import os, sys
+    from repro.mining import SpilledBackend, SpilledDB, mine_frequent_backend
+    from repro.mining.distributed import MiningCheckpoint
+
+    seg_dir, ckpt_path, min_count = sys.argv[1], sys.argv[2], int(sys.argv[3])
+    db = SpilledDB.open(seg_dir)
+    calls = []
+
+    def hard_kill(level, chunk):
+        calls.append((level, chunk))
+        if len(calls) == db.n_chunks + 3:
+            os._exit(17)       # SIGKILL-equivalent: no finally, no flush
+
+    mine_frequent_backend(SpilledBackend(db), min_count,
+                          checkpoint=MiningCheckpoint(ckpt_path),
+                          on_chunk=hard_kill)
+    os._exit(0)                # must not be reached
+""")
+
+
+def test_spilled_hard_kill_process_resume(tmp_path):
+    """Process death mid-level (os._exit: no cleanup handlers run): the
+    parent reopens the SAME on-disk segments + checkpoint and finishes the
+    mine bit-identically to the never-killed run."""
+    rng = np.random.default_rng(11)
+    tx = _db(rng, 200, 10, p=0.4)
+    want = mine_frequent(tx, 40)
+    sdb = StreamingDB.encode(tx, chunk_rows=16)
+    spl = SpilledDB.from_streaming(sdb, str(tmp_path / "seg"))
+    assert spl.n_chunks >= 4
+    ckpt_path = str(tmp_path / "mine.json")
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _KILL_SCRIPT, str(tmp_path / "seg"),
+         ckpt_path, "40"], env=env, capture_output=True, text=True,
+        timeout=600)
+    assert proc.returncode == 17, proc.stderr   # it died where we told it to
+
+    state = json.load(open(ckpt_path))
+    assert state["partial"] is not None         # durable mid-level partial
+
+    reopened = SpilledDB.open(str(tmp_path / "seg"))
+    got = mine_frequent_backend(SpilledBackend(reopened), 40,
+                                checkpoint=MiningCheckpoint(ckpt_path))
+    assert got == want
+
+
+# -------------------------------------------------- VersionedDB disk tier
+def _oracle(history, classes, n_classes, keys):
+    ddb = DenseDB.encode(history, classes=classes, n_classes=n_classes)
+    out = np.zeros((len(keys), n_classes), np.int32)
+    known = [i for i, k in enumerate(keys)
+             if all(a in ddb.vocab for a in k)]
+    if known:
+        masks = encode_targets([keys[i] for i in known], ddb.vocab)
+        got = np.asarray(itemset_counts(ddb.bits, jnp.asarray(masks),
+                                        ddb.weights))
+        out[np.array(known)] = got
+    return out
+
+
+def test_versioned_db_spilled_residency_and_gen_cleanup(tmp_path):
+    rng = np.random.default_rng(12)
+    tx = _db(rng, 200, 10)
+    y = [int(rng.random() < 0.3) for _ in tx]
+    db = VersionedDB(tx, classes=y, n_classes=2, spill=True,
+                     spill_dir=str(tmp_path), chunk_rows=32,
+                     merge_ratio=1e9)        # keep the delta resident
+    assert db.resident == "spilled"
+    st_ = db.stats()
+    assert st_["resident"] == "spilled"
+    assert st_["spill"]["segments"] == db.base.n_chunks >= 2
+    assert st_["spill"]["chunk_rows"] == 32
+    history, classes = list(tx), list(y)
+    probes = [(0, 1), (2,), (3, 7, 9), (11,)]
+    np.testing.assert_array_equal(db.counts(probes),
+                                  _oracle(history, classes, 2, probes))
+
+    batch = _db(rng, 40, 12)
+    yb = [int(rng.random() < 0.3) for _ in batch]
+    db.append(batch, classes=yb)
+    history += batch
+    classes += yb
+    assert db.delta_rows > 0                 # composed base+delta sweep
+    np.testing.assert_array_equal(db.counts(probes),
+                                  _oracle(history, classes, 2, probes))
+
+    old_dir = db.base.directory
+    db.compact()                             # fold: new gen dir, old deleted
+    assert db.resident == "spilled" and db.delta_rows == 0
+    assert db.base.directory != old_dir
+    assert not os.path.exists(old_dir)       # replaced gen cleaned up
+    assert os.path.exists(os.path.join(db.base.directory, MANIFEST_NAME))
+    np.testing.assert_array_equal(db.counts(probes),
+                                  _oracle(history, classes, 2, probes))
+
+
+def test_versioned_db_auto_spill_threshold(tmp_path):
+    rng = np.random.default_rng(13)
+    tx = _db(rng, 150, 10)
+    db = VersionedDB(tx, spill_dir=str(tmp_path), spill_threshold_bytes=64,
+                     chunk_rows=32)
+    assert db.resident == "spilled"          # footprint > 64-byte budget
+    probes = [(0,), (1, 2), (4, 5, 6)]
+    np.testing.assert_array_equal(
+        db.counts(probes), _oracle(tx, None, 1, probes))
+    # under-budget store stays in host RAM
+    small = VersionedDB(tx[:5], spill_dir=str(tmp_path / "small"),
+                        spill_threshold_bytes=1 << 30)
+    assert small.resident != "spilled"
+
+
+def test_versioned_mine_over_spilled_base(tmp_path):
+    rng = np.random.default_rng(14)
+    tx = _db(rng, 200, 10, p=0.4)
+    db = VersionedDB(tx, spill=True, spill_dir=str(tmp_path), chunk_rows=32)
+    assert db.resident == "spilled"
+    assert versioned_mine_frequent(db, 40) == mine_frequent(tx, 40)
+
+
+# ------------------------------------------- compaction policy + compactor
+def test_min_compact_rows_floor_stops_bootstrap_thrash(tmp_path):
+    """Satellite-1 regression: a cold-start append loop used to compact on
+    EVERY tiny batch (delta_rows > ratio * max(1, 0) is true immediately).
+    The row floor keeps compaction off until the delta is worth folding."""
+    rng = np.random.default_rng(15)
+
+    def run(min_compact_rows):
+        db = VersionedDB(n_classes=1, min_compact_rows=min_compact_rows)
+        history = []
+        for _ in range(20):
+            batch = _db(rng, 8, 8)
+            db.append(batch)
+            history += batch
+        probes = [(0,), (1, 2), (3,)]
+        np.testing.assert_array_equal(
+            db.counts(probes), _oracle(history, None, 1, probes))
+        return db
+
+    floored = run(min_compact_rows=None)     # default floor
+    assert floored.n_compactions == 0        # no thrash on cold start
+    assert floored.stats()["min_compact_rows"] > 0
+    thrash = run(min_compact_rows=0)         # floor off: the old behavior
+    assert thrash.n_compactions >= 10        # compacted on most tiny appends
+    # (dedup folds some batches below the ratio trigger, hence not all 20)
+    # explicit compact() ignores the floor (the operator asked for a fold)
+    floored.compact()
+    assert floored.delta_rows == 0 and floored.n_compactions == 1
+
+
+def test_background_compactor_exact_under_racing_appends():
+    rng = np.random.default_rng(16)
+    tx = _db(rng, 120, 10)
+    db = VersionedDB(tx, n_classes=1, merge_ratio=0.05, min_compact_rows=0,
+                     background_compaction=True)
+    history = list(tx)
+    probes = [(0, 1), (2,), (3, 7)]
+    try:
+        for _ in range(6):
+            batch = _db(rng, 40, 10)
+            db.append(batch)
+            history += batch
+        db._compactor.drain()
+        np.testing.assert_array_equal(
+            db.counts(probes), _oracle(history, None, 1, probes))
+        st_ = db.stats()
+        assert st_["compactor"] is not None
+        assert st_["compactor"]["runs"] >= 1
+        assert db.n_compactions >= 1
+        assert db.last_compaction_error is None
+    finally:
+        db.close()
+    assert db.stats()["compactor"] is None   # close() reverts to inline
+
+
+def test_background_compactor_build_failure_absorbed(monkeypatch):
+    """Satellite-3 (background flavor): a failing off-lock base build must
+    leave base+delta serving exactly, surface the error in stats(), and a
+    later compact succeed once the fault clears."""
+    rng = np.random.default_rng(17)
+    tx = _db(rng, 120, 10)
+    db = VersionedDB(tx, n_classes=1, merge_ratio=0.05, min_compact_rows=0,
+                     background_compaction=True)
+    history = list(tx)
+    probes = [(0, 1), (2,), (3, 7)]
+    real_make_base = db._make_base
+    try:
+        def boom(bits, weights, vocab=None):
+            raise RuntimeError("disk full")
+
+        monkeypatch.setattr(db, "_make_base", boom)
+        batch = _db(rng, 60, 10)
+        db.append(batch)                      # trigger: queues a bg compact
+        history += batch
+        db._compactor.drain()
+        st_ = db.stats()
+        assert st_["failed_compactions"] >= 1
+        assert "disk full" in st_["last_compaction_error"]
+        assert db.delta_rows > 0              # delta NOT dropped
+        np.testing.assert_array_equal(        # base+delta still exact
+            db.counts(probes), _oracle(history, None, 1, probes))
+
+        monkeypatch.setattr(db, "_make_base", real_make_base)
+        db.compact()                          # fault cleared: fold succeeds
+        assert db.delta_rows == 0
+        np.testing.assert_array_equal(
+            db.counts(probes), _oracle(history, None, 1, probes))
+    finally:
+        db.close()
+
+
+def test_inline_compaction_failure_metrics(monkeypatch):
+    """Satellite-3 (inline flavor): an append-triggered compaction failure is
+    absorbed (the append committed), surfaced through stats(), and leaves the
+    base+delta composition exact; an EXPLICIT compact() re-raises."""
+    rng = np.random.default_rng(18)
+    tx = _db(rng, 100, 8)
+    db = VersionedDB(tx, n_classes=1, merge_ratio=0.05, min_compact_rows=0)
+    history = list(tx)
+    monkeypatch.setattr(db, "_make_base",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("torn write")))
+    batch = _db(rng, 30, 8)
+    assert db.append(batch) == 1              # append commits despite the fail
+    history += batch
+    st_ = db.stats()
+    assert st_["failed_compactions"] == 1
+    assert "torn write" in st_["last_compaction_error"]
+    assert db.delta_rows > 0                  # build-before-drop held
+    probes = [(0,), (1, 2), (3, 4)]
+    np.testing.assert_array_equal(
+        db.counts(probes), _oracle(history, None, 1, probes))
+    with pytest.raises(RuntimeError):
+        db.compact()                          # explicit compact re-raises
+    assert db.delta_rows > 0                  # delta still not dropped
+    np.testing.assert_array_equal(
+        db.counts(probes), _oracle(history, None, 1, probes))

@@ -53,6 +53,18 @@ python -m pytest -q tests/test_autotune.py
 python tools/autotune.py --smoke
 python -m benchmarks.autotune --smoke
 
+echo "=== disk-tier smoke (spill/mmap store + prefetch + compactor) ==="
+python -m pytest -q tests/test_spill.py tests/test_lockwatch.py
+python -m benchmarks.disk_tier --smoke
+# end-to-end: a tiny spill budget forces REAL on-disk segments under the
+# serving loop, with the background compactor folding appended deltas
+SPILL_DIR="$(mktemp -d)"
+python -m repro.launch.serve_counts --rows 2000 --items 24 --rounds 4 \
+    --batch 16 --appends 2 --append-rows 300 --pool 64 \
+    --spill-dir "$SPILL_DIR" --spill-threshold-bytes 4096 --bg-compact \
+    --min-compact-rows 64 --theta 0.08 --verify
+rm -rf "$SPILL_DIR"
+
 echo "=== perfgate self-test (gate must reject an injected regression) ==="
 python tools/perfgate.py --self-test
 
@@ -95,3 +107,6 @@ gate obs benchmarks.obs_overhead BENCH_obs.json
 
 echo "=== autotune perf record (tuned >= default floor + perfgate) ==="
 gate tune benchmarks.autotune BENCH_tune.json
+
+echo "=== disk-tier perf record (spilled-vs-RAM overlap + perfgate) ==="
+gate disk benchmarks.disk_tier BENCH_disk.json

@@ -109,12 +109,28 @@ def _tune_metrics(doc: dict) -> Metrics:
     return out
 
 
+def _disk_metrics(doc: dict) -> Metrics:
+    """Disk-tier gate: the prefetch-overlapped spilled sweep's wall time and
+    its ratio to the all-RAM sweep (the bench enforces the absolute 1.5x
+    envelope in-run; the perfgate pins the trend against the committed
+    record so overlap quality cannot silently erode)."""
+    out: Metrics = {}
+    pre = _row(doc, variant="spilled_prefetch")
+    if pre:
+        out["spilled_prefetch_us"] = (pre["us_per_sweep"], "time", TIME_TOL)
+    ov = _row(doc, variant="overlap")
+    if ov:
+        out["ram_over_spilled_ratio"] = (ov["ratio"], "ratio", RATIO_TOL)
+    return out
+
+
 SUITES: Dict[str, Callable[[dict], Metrics]] = {
     "serve": _serve_metrics,
     "shard": _shard_metrics,
     "gfp": _gfp_metrics,
     "obs": _obs_metrics,
     "tune": _tune_metrics,
+    "disk": _disk_metrics,
 }
 
 
@@ -155,6 +171,10 @@ def _inject_regression(suite: str, doc: dict) -> dict:
     for row in bad.get("rows", []):
         if "us_per_query" in row:
             row["us_per_query"] *= 100.0
+        if "us_per_sweep" in row:
+            row["us_per_sweep"] *= 100.0
+        if row.get("variant") == "overlap":
+            row["ratio"] = row["ratio"] * 0.1
         if "total_us" in row:
             row["total_us"] *= 100.0
         if row.get("variant") == "launch_reduction":
@@ -216,7 +236,8 @@ def main() -> int:
                           "shard": "BENCH_shard.json",
                           "gfp": "BENCH_gfp.json",
                           "obs": "BENCH_obs.json",
-                          "tune": "BENCH_tune.json"})
+                          "tune": "BENCH_tune.json",
+                          "disk": "BENCH_disk.json"})
     if not (args.suite and args.baseline and args.fresh):
         ap.error("--suite, --baseline and --fresh are required "
                  "(or use --self-test)")
